@@ -1,0 +1,202 @@
+"""Benchmark harness — one function per paper table/figure plus the
+roofline table.  Prints ``name,us_per_call,derived`` CSV rows.
+
+Paper benchmarks model the paper's own hardware (8x NVIDIA GK210,
+PCIe 20 GB/s p2p, ~2.9 TF/s fp32/GPU) with the simulated step time
+t = compute/FLOPS + comm_bytes/BW, and report communication bytes from
+the tiling cost model — DP / MP / SOYBEAN(solver), like Figs. 8–10.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.builders import (alexnet_graph, cnn_graph, mlp_graph,
+                                 vgg_graph)
+from repro.core.cost import graph_flops
+from repro.core.solver import (MeshAxis, assignment_cost_naive,
+                               canonical_mp_assignment, composed_cost,
+                               data_parallel_assignment, solve_mesh)
+
+GPU_FLOPS = 2.9e12       # GK210 fp32
+PCIE_BW = 20e9           # bytes/s p2p (paper §6.1)
+
+
+def row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _axes(n):
+    k = n.bit_length() - 1
+    return [MeshAxis(f"c{i}", 2, PCIE_BW) for i in range(k)]
+
+
+def _strategies(g, n):
+    axes = _axes(n)
+    dp = data_parallel_assignment(g)
+    mp = canonical_mp_assignment(g)
+    t0 = time.perf_counter()
+    sol = solve_mesh(g, axes, beam=4000, mem_scale=0.0)
+    solve_us = (time.perf_counter() - t0) * 1e6
+    return {
+        "dp": composed_cost(g, axes, [dp] * len(axes)),
+        "mp": composed_cost(g, axes, [mp] * len(axes)),
+        "soybean": sol.total_bytes,
+    }, solve_us
+
+
+def _sim_time(g, comm_bytes, n):
+    return graph_flops(g) / (GPU_FLOPS * n) + comm_bytes / PCIE_BW
+
+
+def bench_section22():
+    """§2.2 worked example (16 GPUs, 5x300 MLP, batch 400)."""
+    g = mlp_graph(batch=400, hidden=[300] * 6)
+    axes = _axes(16)
+    dp = data_parallel_assignment(g)
+    mp = canonical_mp_assignment(g)
+    t0 = time.perf_counter()
+    sol = solve_mesh(g, axes, beam=4000, mem_scale=0.0)
+    us = (time.perf_counter() - t0) * 1e6
+    dpb = assignment_cost_naive(g, axes, [dp] * 4) / 1e6
+    mpb = assignment_cost_naive(g, axes, [mp] * 4) / 1e6
+    hyb = assignment_cost_naive(g, axes, [dp, dp, mp, mp]) / 1e6
+    solb = assignment_cost_naive(g, axes, sol.per_axis) / 1e6
+    row("sec2.2_example", us,
+        f"DP={dpb:.1f}MB(paper 57.6) MP={mpb:.1f}MB(76.8) "
+        f"hand-hybrid={hyb:.1f}MB(33.6) soybean={solb:.1f}MB")
+
+
+def bench_fig8_mlp():
+    """Fig. 8: 4-layer MLP, hidden 8K/12K, batch 512/2048, 2–8 GPUs."""
+    for hidden, batch in ((8192, 512), (8192, 2048), (12288, 2048)):
+        for n in (2, 4, 8):
+            g = mlp_graph(batch=batch, hidden=[hidden] * 5)
+            costs, us = _strategies(g, n)
+            t = {k: _sim_time(g, v, n) for k, v in costs.items()}
+            best = min(("dp", "mp"), key=lambda k: t[k])
+            speedup = t[best] / t["soybean"]
+            row(f"fig8_mlp_h{hidden}_b{batch}_g{n}", us,
+                f"commMB dp={costs['dp']/1e6:.0f} mp={costs['mp']/1e6:.0f} "
+                f"soybean={costs['soybean']/1e6:.0f} "
+                f"simtime dp={t['dp']*1e3:.1f}ms mp={t['mp']*1e3:.1f}ms "
+                f"sb={t['soybean']*1e3:.1f}ms "
+                f"sb_vs_best={speedup:.2f}x")
+
+
+def bench_fig9_cnn():
+    """Fig. 9: 5-layer CNN; (a) 6px images/2K filters, (b) 24px/512."""
+    for name, image, filt in (("small_img_big_filter", 6, 2048),
+                              ("big_img_small_filter", 24, 512)):
+        for n in (2, 4, 8):
+            g = cnn_graph(batch=256, image=image,
+                          channels=[3] + [filt] * 5, fc=[1000],
+                          pool_every=100)
+            costs, us = _strategies(g, n)
+            t = {k: _sim_time(g, v, n) for k, v in costs.items()}
+            row(f"fig9_cnn_{name}_g{n}", us,
+                f"commMB dp={costs['dp']/1e6:.0f} mp={costs['mp']/1e6:.0f} "
+                f"soybean={costs['soybean']/1e6:.0f} "
+                f"dp_best={t['dp']<=t['mp']} "
+                f"sb_leq_both={t['soybean'] <= min(t['dp'], t['mp']) + 1e-9}")
+
+
+def bench_fig10_speedup():
+    """Fig. 10: AlexNet / VGG throughput speedup vs batch on 8 GPUs."""
+    for name, builder in (("alexnet", alexnet_graph), ("vgg", vgg_graph)):
+        for batch in (64, 128, 256, 512, 1024):
+            g = builder(batch)
+            costs, us = _strategies(g, 8)
+            flops = graph_flops(g)
+            t1 = flops / GPU_FLOPS
+            t8 = {k: flops / (GPU_FLOPS * 8) + v / PCIE_BW
+                  for k, v in costs.items()}
+            sp_dp = t1 / t8["dp"]
+            sp_sb = t1 / t8["soybean"]
+            row(f"fig10_{name}_b{batch}", us,
+                f"speedup8 dp={sp_dp:.2f}x soybean={sp_sb:.2f}x "
+                f"ratio={sp_sb/max(sp_dp,1e-9):.2f}")
+
+
+def bench_solver_scaling():
+    """Solve-time scaling in depth and devices (the paper's O(3^c N))."""
+    for layers in (4, 8, 16, 32):
+        g = mlp_graph(batch=256, hidden=[1024] * (layers + 1))
+        t0 = time.perf_counter()
+        solve_mesh(g, _axes(16), beam=4000, mem_scale=0.0)
+        us = (time.perf_counter() - t0) * 1e6
+        row(f"solver_scaling_L{layers}", us, f"ops={len(g.ops)}")
+
+
+def bench_roofline():
+    """Roofline terms per dry-run cell (reads experiments/dryrun)."""
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "dryrun")
+    if not os.path.isdir(d):
+        row("roofline", 0.0, "no dryrun artifacts yet")
+        return
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(d, f)))
+        if rec.get("status") != "ok":
+            row(f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+                0.0, rec.get("status", "?"))
+            continue
+        row(f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+            rec.get("compile_s", 0) * 1e6,
+            f"tc={rec['t_compute']:.3e} tm={rec['t_memory']:.3e} "
+            f"tx={rec['t_collective']:.3e} dom={rec['dominant']} "
+            f"mfu_bound={rec['roofline_fraction']:.3f} "
+            f"mem_eff={rec.get('mem_efficiency')}")
+
+
+def bench_kernels():
+    """Microbench: XLA flash-attention path + SSD chunk scan on CPU."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.attention import flash_attention_xla
+    from repro.models.mamba import ssd_scan
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 512, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (2, 512, 4, 64), jnp.float32)
+    v = jax.random.normal(key, (2, 512, 4, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention_xla(q, k, v))
+    f(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        f(q, k, v).block_until_ready()
+    row("kernel_flash_xla_512", (time.perf_counter() - t0) / 5 * 1e6,
+        "B2 S512 H8 KV4 hd64")
+
+    xh = jax.random.normal(key, (2, 512, 4, 16))
+    al = -jax.nn.softplus(jax.random.normal(key, (2, 512, 4)))
+    bb = jax.random.normal(key, (2, 512, 16)) * 0.3
+    cc = jax.random.normal(key, (2, 512, 16)) * 0.3
+    g = jax.jit(lambda *a: ssd_scan(*a, chunk=128)[0])
+    g(xh, al, bb, cc).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        g(xh, al, bb, cc).block_until_ready()
+    row("kernel_ssd_chunk_512", (time.perf_counter() - t0) / 5 * 1e6,
+        "B2 S512 H4 P16 N16")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_section22()
+    bench_fig8_mlp()
+    bench_fig9_cnn()
+    bench_fig10_speedup()
+    bench_solver_scaling()
+    bench_kernels()
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""The paper's §2.2 worked example + Figure 8 sweep, end to end:
+DP=57.6MB, MP=76.8MB, hand hybrid=33.6MB, and the solver's plan.
+
+  PYTHONPATH=src python examples/paper_mlp.py
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.builders import mlp_graph
+from repro.core.solver import (MeshAxis, assignment_cost_naive,
+                               canonical_mp_assignment, composed_cost,
+                               data_parallel_assignment, solve_mesh)
+
+g = mlp_graph(batch=400, hidden=[300] * 6)
+axes = [MeshAxis(f"cut{i}", 2, 20e9) for i in range(4)]   # 16 GPUs
+dp = data_parallel_assignment(g)
+mp = canonical_mp_assignment(g)
+print("paper §2.2 (16 GPUs, 5x300 MLP, batch 400), PS accounting:")
+print(f"  data parallelism : "
+      f"{assignment_cost_naive(g, axes, [dp]*4)/1e6:6.1f} MB  (paper 57.6)")
+print(f"  model parallelism: "
+      f"{assignment_cost_naive(g, axes, [mp]*4)/1e6:6.1f} MB  (paper 76.8)")
+print(f"  hybrid (2DP+2MP) : "
+      f"{assignment_cost_naive(g, axes, [dp,dp,mp,mp])/1e6:6.1f} MB  "
+      f"(paper 33.6)")
+sol = solve_mesh(g, axes, mem_scale=0.0)
+print(f"  SOYBEAN solver   : {sol.total_bytes/1e6:6.1f} MB ring-accounted "
+      f"(hand hybrid ring: "
+      f"{composed_cost(g, axes, [dp,dp,mp,mp])/1e6:.1f} MB)")
+print("\nper-cut tilings found for W1/x1 (r=replicate, P=partition):")
+print(sol.describe(["x0", "W1", "x1", "d_W1"]))

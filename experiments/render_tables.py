@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md roofline tables from dry-run artifacts."""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def load(d):
+    out = {}
+    p = os.path.join(HERE, d)
+    if not os.path.isdir(p):
+        return out
+    for f in sorted(os.listdir(p)):
+        if f.endswith(".json"):
+            r = json.load(open(os.path.join(p, f)))
+            out[(r["arch"], r["shape"], r["mesh"].replace("_cap", ""))] = r
+    return out
+
+
+def fmt(r, key, scale=1.0, fmtstr="{:.2e}"):
+    if r is None or r.get("status") != "ok":
+        return "—"
+    v = r.get(key)
+    return fmtstr.format(v * scale) if v is not None else "—"
+
+
+def main(which="both"):
+    base = load("dryrun")
+    opt = load("dryrun_opt")
+    archs = sorted({k[0] for k in base})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for mesh in (["pod1", "pod2"] if which == "both" else [which]):
+        print(f"\n### {'single-pod 16x16 (256 chips)' if mesh=='pod1' else 'multi-pod 2x16x16 (512 chips)'}\n")
+        print("| arch | shape | status | dom | t_comp (s) | t_mem (s) | "
+              "t_coll (s) | MFU-bound | mem-eff | opt: dom | t_comp | "
+              "t_mem | t_coll | MFU-bound |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+        for a in archs:
+            for s in shapes:
+                b = base.get((a, s, mesh))
+                o = opt.get((a, s, mesh))
+                if b is None:
+                    continue
+                if b.get("status") != "ok":
+                    print(f"| {a} | {s} | {b.get('status')} "
+                          f"| — | — | — | — | — | — | — | — | — | — | — |")
+                    continue
+                print(
+                    f"| {a} | {s} | ok | {b['dominant'][:4]} "
+                    f"| {fmt(b,'t_compute')} | {fmt(b,'t_memory')} "
+                    f"| {fmt(b,'t_collective')} "
+                    f"| {fmt(b,'roofline_fraction',1,'{:.3f}')} "
+                    f"| {fmt(b,'mem_efficiency',1,'{:.3f}')} "
+                    f"| {o['dominant'][:4] if o and o.get('status')=='ok' else '—'} "
+                    f"| {fmt(o,'t_compute')} | {fmt(o,'t_memory')} "
+                    f"| {fmt(o,'t_collective')} "
+                    f"| {fmt(o,'roofline_fraction',1,'{:.3f}')} |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

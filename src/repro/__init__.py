@@ -1,0 +1,2 @@
+"""SOYBEAN-JAX: unified data/model/hybrid parallelism via tensor tiling."""
+__version__ = "1.0.0"

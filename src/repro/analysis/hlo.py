@@ -1,0 +1,102 @@
+"""Collective-byte accounting from compiled (SPMD-partitioned) HLO text.
+
+cost_analysis() has no collective numbers, so we parse the partitioned
+module: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op, its per-device operand/result bytes and replica
+group size, then apply ring-collective wire formulas per device:
+
+    all-reduce          2·s·(g-1)/g      (s = per-device result bytes)
+    all-gather          s_shard·(g-1)    (s_shard = operand bytes)
+    reduce-scatter      s_out·(g-1)      (s_out = result bytes)
+    all-to-all          s·(g-1)/g
+    collective-permute  s
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(shape_str: str) -> float:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, float]      # per-device result bytes by kind
+    wire_bytes_per_device: float        # ring-model wire bytes
+    naive_operand_bytes: float          # "sum operand sizes" (spec formula)
+
+    def total(self) -> float:
+        return self.wire_bytes_per_device
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return default
+
+
+def collect(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    res_bytes: Dict[str, float] = {}
+    wire = 0.0
+    naive = 0.0
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        s = shape_bytes(shape_str)
+        g = _group_size(line, n_devices)
+        counts[kind] = counts.get(kind, 0) + 1
+        res_bytes[kind] = res_bytes.get(kind, 0.0) + s
+        naive += s
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            wire += 2.0 * s * (g - 1) / g
+        elif kind == "all-gather":
+            wire += s * (g - 1) / g      # s is the gathered result here
+        elif kind == "reduce-scatter":
+            wire += s * (g - 1)
+        elif kind == "all-to-all":
+            wire += s * (g - 1) / g
+        elif kind == "collective-permute":
+            wire += s
+    return CollectiveStats(counts, res_bytes, wire, naive)

@@ -1,0 +1,150 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = ring_wire_bytes_per_device / (links × link_bw)
+
+cost_analysis() on an SPMD-partitioned executable reports the per-device
+partitioned module, so the terms are per-chip directly; we cross-check
+with MODEL_FLOPS = 6·N·D (or 6·N_active·D for MoE) / n_devices and report
+the useful-compute ratio (catches remat/redundancy waste)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+from ..launch.mesh import HBM_BW, ICI_BW, ICI_LINKS_PER_AXIS, PEAK_FLOPS
+from . import hlo
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    naive_collective_bytes: float
+    collective_counts: Dict[str, int]
+    model_flops_total: float
+    bytes_per_dev_peak: Optional[float]   # memory_analysis if available
+    ideal_bytes_per_dev: Optional[float] = None   # compulsory HBM traffic
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_dev / (ICI_BW * ICI_LINKS_PER_AXIS)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        per_dev_model = self.model_flops_total / max(1, self.n_devices)
+        return per_dev_model / max(1.0, self.flops_per_dev)
+
+    @property
+    def mem_efficiency(self) -> Optional[float]:
+        """compulsory HBM traffic / reported traffic (1.0 = every byte
+        moved was unavoidable).  The headline metric for memory-bound
+        (decode) cells; 'bytes accessed' ignores fusion so this is a
+        conservative lower bound."""
+        if self.ideal_bytes_per_dev is None or not self.hbm_bytes_per_dev:
+            return None
+        return min(1.0, self.ideal_bytes_per_dev / self.hbm_bytes_per_dev)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at
+        the bound implied by the dominant term: useful_flops / (t_bound ×
+        peak)."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        per_dev_model = self.model_flops_total / max(1, self.n_devices)
+        return per_dev_model / (t_bound * PEAK_FLOPS) if t_bound else 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_dev": self.flops_per_dev,
+            "hbm_bytes_per_dev": self.hbm_bytes_per_dev,
+            "wire_bytes_per_dev": self.wire_bytes_per_dev,
+            "naive_collective_bytes": self.naive_collective_bytes,
+            "collective_counts": self.collective_counts,
+            "model_flops_total": self.model_flops_total,
+            "bytes_per_dev_peak": self.bytes_per_dev_peak,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "ideal_bytes_per_dev": self.ideal_bytes_per_dev,
+            "mem_efficiency": self.mem_efficiency,
+        }
+
+
+def model_train_flops(cfg, shape) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE); D = tokens."""
+    n = cfg.active_param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    tokens = (shape.global_batch if shape.kind == "decode"
+              else shape.tokens)
+    return mult * n * tokens
+
+
+def tree_bytes(tree) -> float:
+    import jax
+    return float(sum(
+        l.size * getattr(l.dtype, "itemsize", 4)
+        for l in jax.tree_util.tree_leaves(tree)
+        if hasattr(l, "size")))
+
+
+def ideal_step_bytes(params_bytes: float, state_bytes: float,
+                     kind: str, n_devices: int) -> float:
+    """Compulsory per-device HBM traffic per step.  decode: read all
+    params + all KV/SSM state (+ write-back of updated state ~ 0).
+    train: params read fwd+bwd (2x) + grads written+read (2x) + Adam
+    m/v read+write (m,v are fp32: already in state_bytes) + weight
+    write.  prefill: params once."""
+    if kind == "decode":
+        return (params_bytes + state_bytes) / n_devices
+    if kind == "train":
+        return (3 * params_bytes + 2 * params_bytes  # fwd+bwd reads, dW rw
+                + 2 * state_bytes + params_bytes) / n_devices
+    return params_bytes / n_devices
+
+
+def analyze(compiled, lowered_text: str, n_devices: int,
+            model_flops: float, arch: str, shape: str,
+            mesh_name: str) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = hlo.collect(lowered_text, n_devices)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                        + getattr(ma, "argument_size_in_bytes", 0)
+                        + getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(arch, shape, mesh_name, n_devices, flops, byts,
+                    coll.wire_bytes_per_device, coll.naive_operand_bytes,
+                    coll.counts, model_flops, mem)

@@ -1,0 +1,114 @@
+"""Sharded checkpointing with atomic commit and elastic (reshard-on-
+restore) semantics.
+
+Layout:  <dir>/step_<N>/manifest.json + arrays.npz  written to a tmp dir
+and atomically renamed, so a crash mid-write never corrupts the latest
+checkpoint (`latest_step` scans only committed dirs).
+
+Restore takes an optional `sharding_fn(path, arr) -> jax.sharding.Sharding`
+so the same checkpoint restores onto a *different* mesh (elastic scaling):
+arrays are host-loaded and re-placed under the new sharding."""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(directory: str, step: int, tree: PyTree,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic checkpoint write.  Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        leaves = _flatten_with_paths(tree)
+        arrays = {}
+        dtypes = {}
+        for k, v in leaves:
+            a = np.asarray(jax.device_get(v))
+            dtypes[k] = str(a.dtype)
+            if a.dtype.kind not in "fiub?":   # ml_dtypes (bfloat16, fp8…)
+                a = a.astype(np.float32)
+            arrays[k] = a
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        treedef = jax.tree_util.tree_structure(tree)
+        manifest = {
+            "step": step,
+            "keys": [k for k, _ in leaves],
+            "dtypes": dtypes,
+            "treedef": str(treedef),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)        # atomic commit
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(directory, name, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: PyTree,
+            sharding_fn: Optional[Callable[[str, np.ndarray], Any]] = None
+            ) -> Tuple[PyTree, Dict[str, Any]]:
+    """Restore into the structure of ``like``.  ``sharding_fn`` enables
+    elastic restore onto a different mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = _flatten_with_paths(like)
+    new_leaves = []
+    for key, leaf in leaves:
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = np.asarray(arr).astype(leaf.dtype)
+        if sharding_fn is not None:
+            arr = jax.device_put(arr, sharding_fn(key, arr))
+        new_leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(like)
+    return treedef.unflatten(new_leaves), manifest["extra"]
+
+
+def gc_old(directory: str, keep: int = 3) -> None:
+    """Keep the newest ``keep`` committed checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(directory)
+        if n.startswith("step_")
+        and os.path.exists(os.path.join(directory, n, "manifest.json")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

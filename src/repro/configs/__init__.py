@@ -1,0 +1,2 @@
+from .base import (ASSIGNED, SHAPES, ArchConfig, MoECfg, SSMCfg, ShapeConfig,
+                   XLSTMCfg, all_archs, cells, get_arch, load_all, register)

@@ -1,0 +1,127 @@
+"""ShardingPlan: solved tilings -> jax.sharding.PartitionSpec.
+
+The solver works on logical tensors with *named* dims; physical arrays in
+the model have per-axis dim names too (configs/sharding rules map param
+paths -> (role, phys_dims)).  A mesh axis that chose Part(d) for a role is
+placed on the first physical axis named ``d``; several mesh axes on the
+same name stack into a tuple (PartitionSpec allows that).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+from .solver import TilingSolution
+from .tiling import Part, REPLICATE
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh_axis_names: Tuple[str, ...]
+    # role -> {mesh_axis_name -> partitioned dim name or None}
+    role_cuts: Dict[str, Dict[str, Optional[str]]]
+
+    @classmethod
+    def from_graph_solution(cls, sol: TilingSolution, g) -> "ShardingPlan":
+        """Extract role->cut mapping from a solved semantic graph (tensors
+        carry their role; the first tensor seen per role wins — builders
+        keep per-role tilings consistent across layer instances)."""
+        roles: Dict[str, str] = {}
+        for name, ts in g.tensors.items():
+            if ts.role and ts.role not in roles.values():
+                roles.setdefault(name, ts.role)
+        return cls.from_solution(sol, roles)
+
+    @classmethod
+    def from_solution(cls, sol: TilingSolution,
+                      tensor_roles: Dict[str, str]) -> "ShardingPlan":
+        """tensor_roles: graph tensor name -> role key."""
+        role_cuts: Dict[str, Dict[str, Optional[str]]] = {}
+        for tname, role in tensor_roles.items():
+            cuts: Dict[str, Optional[str]] = {}
+            for ax, assign in zip(sol.axes, sol.per_axis):
+                t = assign.get(tname, REPLICATE)
+                cuts[ax.name] = t.dim if isinstance(t, Part) else None
+            role_cuts[role] = cuts
+        return cls(tuple(ax.name for ax in sol.axes), role_cuts)
+
+    def pspec(self, role: str, phys_dims: Sequence[str],
+              default: Optional[P] = None) -> P:
+        """PartitionSpec for a physical array whose axes are named
+        ``phys_dims``.  Unknown roles return ``default`` (fully
+        replicated if None)."""
+        cuts = self.role_cuts.get(role)
+        if cuts is None:
+            return default
+        entries: List[List[str]] = [[] for _ in phys_dims]
+        for ax in self.mesh_axis_names:
+            d = cuts.get(ax)
+            if d is None:
+                continue
+            for i, pd in enumerate(phys_dims):
+                if pd == d:
+                    entries[i].append(ax)
+                    break
+        spec = []
+        for e in entries:
+            if not e:
+                spec.append(None)
+            elif len(e) == 1:
+                spec.append(e[0])
+            else:
+                spec.append(tuple(e))
+        while spec and spec[-1] is None:
+            spec.pop()
+        return P(*spec)
+
+    def with_override(self, role: str,
+                      cuts: Dict[str, Optional[str]]) -> "ShardingPlan":
+        rc = dict(self.role_cuts)
+        rc[role] = cuts
+        return ShardingPlan(self.mesh_axis_names, rc)
+
+    def describe(self) -> str:
+        lines = []
+        for role in sorted(self.role_cuts):
+            cuts = self.role_cuts[role]
+            s = ", ".join(f"{a}->{d}" for a, d in cuts.items() if d)
+            lines.append(f"  {role:24s} [{s or 'replicated'}]")
+        return "\n".join(lines)
+
+
+def manual_megatron_plan(mesh_axis_names: Sequence[str],
+                         data_axes: Sequence[str],
+                         model_axis: str) -> ShardingPlan:
+    """Hand-written Megatron-style baseline plan (for comparison against
+    the solver's output): batch on data axes, attention heads / ffn hidden
+    / vocab / experts on the model axis."""
+    def cuts(**kw):
+        c = {a: None for a in mesh_axis_names}
+        c.update(kw)
+        return c
+
+    da = {a: "batch" for a in data_axes}
+    role_cuts = {
+        "x":        cuts(**da),
+        "logits":   cuts(**da, **{model_axis: "vocab"}),
+        "embed":    cuts(**{model_axis: "vocab"}),
+        "lm_head":  cuts(**{model_axis: "vocab"}),
+        "wq":       cuts(**{model_axis: "heads"}),
+        "wk":       cuts(**{model_axis: "heads"}),
+        "wv":       cuts(**{model_axis: "heads"}),
+        "wo":       cuts(**{model_axis: "heads"}),
+        "w_gate":   cuts(**{model_axis: "d_ff"}),
+        "w_up":     cuts(**{model_axis: "d_ff"}),
+        "w_down":   cuts(**{model_axis: "d_ff"}),
+        "moe_gate": cuts(),
+        "moe_up":   cuts(**{model_axis: "expert"}),
+        "moe_down": cuts(**{model_axis: "expert"}),
+        "ssm_in":   cuts(**{model_axis: "inner"}),
+        "ssm_out":  cuts(**{model_axis: "inner"}),
+        "kv_cache": cuts(**da, **{model_axis: "heads"}),
+        "ssm_state": cuts(**da, **{model_axis: "inner"}),
+        "norm":     cuts(),
+    }
+    return ShardingPlan(tuple(mesh_axis_names), role_cuts)

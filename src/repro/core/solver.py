@@ -1,0 +1,352 @@
+"""Optimal tiling search (paper §4.2.2 one-cut DP, §4.3 k-cut recursion).
+
+One-cut: BFS-level the undirected op graph (ops adjacent iff they share a
+tensor — this automatically interleaves forward op l with its backward and
+gradient ops: the paper's "operators that share inputs or outputs are
+considered together").  We then run exact dynamic programming along the
+BFS op order with *variable elimination*: the DP state assigns tilings to
+the currently *live* tensors (those still used by a later op) — this is
+Eq. (5) with the boundary τ_l generalized per-op, and returns the same
+optimum as level-DP while scaling to ops with many tensors.
+
+Mesh k-cut: the paper recursively halves the device set; a PartitionSpec
+can give each mesh axis at most one tensor dim, so we solve one cut *per
+mesh axis* (arity = axis size), slowest interconnect first (§5.1), dividing
+tensor shapes between cuts (Algorithm 1).  Total bytes use the physically
+accurate weighting δ_i × groups_above(i): for a run of identical binary
+cuts this reproduces the arity-2^m ring-collective cost exactly (see
+DESIGN.md on Theorem 1 accounting).
+
+`solve_one_cut_bruteforce` enumerates every assignment — the optimality
+oracle for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .cost import (Assignment, graph_cost, memory_penalties, op_cost,
+                   op_cost_table, tensor_tiling_choices)
+from .graph import Graph, OpSpec
+from .tiling import REPLICATE, Tiling
+
+
+@dataclasses.dataclass
+class OneCutSolution:
+    cost: float
+    assignment: Assignment
+
+
+def solve_one_cut(g: Graph, arity: int,
+                  fixed: Optional[Assignment] = None,
+                  beam: Optional[int] = 50_000,
+                  mem_scale: float = 1.0) -> OneCutSolution:
+    """Optimal (or beam-pruned) one-cut tiling of graph ``g`` across
+    ``arity`` device groups.  Exact variable-elimination DP over the
+    layer-group op order; tilings are interned to small ints for speed.
+    ``fixed`` pins tilings of given tensors."""
+    if arity <= 1:
+        return OneCutSolution(0.0, {t: REPLICATE for t in g.tensors})
+    fixed = fixed or {}
+    order = g.elimination_order()
+
+    names = list(g.tensors)
+    tid = {t: i for i, t in enumerate(names)}
+    choices: List[List[Tiling]] = [
+        [fixed[t]] if t in fixed else tensor_tiling_choices(g, t, arity)
+        for t in names
+    ]
+    n_choice = [len(c) for c in choices]
+
+    last_use = [-1] * len(names)
+    for i, op in enumerate(order):
+        for t in g.op_tensors(op):
+            last_use[tid[t]] = i
+
+    # soft-capacity penalties, charged once when a tensor is assigned
+    pen = memory_penalties(g, arity, mem_scale) if mem_scale else {}
+    pen_by_id = {}
+    for t, per in pen.items():
+        j = tid[t]
+        pen_by_id[j] = [per.get(c, 0.0) for c in choices[j]]
+
+    # DP state: tuple of (tensor_id, choice_idx) for live assigned tensors
+    # (ascending tensor_id) -> (cost, backpointer dict tensor_id->choice)
+    state: Dict[tuple, Tuple[float, Dict[int, int]]] = {(): (0.0, {})}
+    live: List[int] = []
+    for i, op in enumerate(order):
+        op_ts = g.op_tensors(op)
+        op_ids = [tid[t] for t in op_ts]
+        # cost table indexed by per-tensor choice indices
+        tbl: Dict[tuple, float] = {}
+        for combo in itertools.product(*(range(n_choice[j]) for j in op_ids)):
+            assign = {t: choices[j][ci]
+                      for t, j, ci in zip(op_ts, op_ids, combo)}
+            tbl[combo] = op_cost(g, op, assign, arity)
+        live_after = sorted(set(
+            j for j in set(live) | set(op_ids) if last_use[j] > i))
+        new_state: Dict[tuple, Tuple[float, Dict[int, int]]] = {}
+        for key, (cost0, back) in state.items():
+            bound = dict(key)
+            free = [j for j in op_ids if j not in bound]
+            for combo in itertools.product(*(range(n_choice[j])
+                                             for j in free)):
+                local = dict(bound)
+                local.update(zip(free, combo))
+                c = cost0 + tbl[tuple(local[j] for j in op_ids)]
+                if c == float("inf"):
+                    continue
+                for j, ci in zip(free, combo):
+                    if j in pen_by_id:
+                        c += pen_by_id[j][ci]
+                nkey = tuple((j, local[j]) for j in live_after
+                             if j in local)
+                cur = new_state.get(nkey)
+                if cur is None or c < cur[0]:
+                    nb = dict(back)
+                    nb.update(zip(free, combo))
+                    new_state[nkey] = (c, nb)
+        if not new_state:
+            raise RuntimeError(
+                f"no feasible tiling at op {op.name} of {g.name} "
+                f"(arity {arity})")
+        if beam is not None and len(new_state) > beam:
+            new_state = dict(sorted(new_state.items(),
+                                    key=lambda kv: kv[1][0])[:beam])
+        state = new_state
+        live = live_after
+
+    best_cost, best_back = min(state.values(), key=lambda v: v[0])
+    full = dict(fixed)
+    for j, ci in best_back.items():
+        full[names[j]] = choices[j][ci]
+    for t in g.tensors:  # untouched tensors -> replicate
+        full.setdefault(t, REPLICATE)
+    return OneCutSolution(best_cost, full)
+
+
+def solve_one_cut_bruteforce(g: Graph, arity: int,
+                             fixed: Optional[Assignment] = None,
+                             mem_scale: float = 1.0) -> OneCutSolution:
+    """Exhaustive reference solver (tests only)."""
+    fixed = fixed or {}
+    names = list(g.tensors)
+    choice_lists = [
+        [fixed[t]] if t in fixed else tensor_tiling_choices(g, t, arity)
+        for t in names
+    ]
+    best: Tuple[float, Optional[Assignment]] = (float("inf"), None)
+    for combo in itertools.product(*choice_lists):
+        assign = dict(zip(names, combo))
+        c = graph_cost(g, assign, arity, mem_scale=mem_scale)
+        if c < best[0]:
+            best = (c, assign)
+    assert best[1] is not None
+    return OneCutSolution(best[0], best[1])
+
+
+@dataclasses.dataclass
+class MeshAxis:
+    name: str
+    size: int
+    bandwidth: float = 50e9  # bytes/s per device along this axis
+
+
+@dataclasses.dataclass
+class TilingSolution:
+    """Per-mesh-axis one-cut assignments, outermost (slowest) first."""
+
+    axes: List[MeshAxis]
+    per_axis: List[Assignment]
+    per_axis_bytes: List[float]     # δ_i × groups_above(i)
+    total_bytes: float
+    total_seconds: float
+
+    def tiling_of(self, tensor: str) -> Tuple[Tiling, ...]:
+        return tuple(a.get(tensor, REPLICATE) for a in self.per_axis)
+
+    def describe(self, tensors: Optional[Sequence[str]] = None) -> str:
+        lines = []
+        names = tensors if tensors is not None else sorted(
+            {t for a in self.per_axis for t in a})
+        for t in names:
+            cuts = ", ".join(
+                f"{ax.name}:{a.get(t, REPLICATE)!r}"
+                for ax, a in zip(self.axes, self.per_axis))
+            lines.append(f"  {t:28s} {cuts}")
+        return "\n".join(lines)
+
+
+def solve_mesh(g: Graph, axes: Sequence[MeshAxis],
+               fixed_per_axis: Optional[Dict[str, Assignment]] = None,
+               beam: Optional[int] = 50_000,
+               mem_scale: float = 1.0) -> TilingSolution:
+    """Algorithm 1 generalized to a named mesh: recursively cut along each
+    axis (slowest first), dividing shapes in between."""
+    fixed_per_axis = fixed_per_axis or {}
+    cur = g
+    groups = 1
+    per_axis: List[Assignment] = []
+    per_bytes: List[float] = []
+    total_b = 0.0
+    total_s = 0.0
+    for ax in axes:
+        sol = solve_one_cut(cur, ax.size,
+                            fixed=fixed_per_axis.get(ax.name), beam=beam,
+                            mem_scale=mem_scale)
+        weighted = sol.cost * groups
+        per_axis.append(sol.assignment)
+        per_bytes.append(weighted)
+        total_b += weighted
+        # seconds: bytes cross this cut in parallel across groups & members
+        total_s += sol.cost / (ax.bandwidth * max(1, ax.size))
+        cur = cur.divided(sol.assignment, ax.size)
+        groups *= ax.size
+    return TilingSolution(list(axes), per_axis, per_bytes, total_b, total_s)
+
+
+def persistent_bytes_per_device(g: Graph, axes: Sequence[MeshAxis],
+                                per_axis: Sequence[Assignment]) -> float:
+    """Per-device bytes of persistent tensors (weights, optimizer moments,
+    KV/SSM caches) under a composed tiling — the hard-capacity check."""
+    from .cost import _PERSISTENT_ROLES
+    from .tiling import Part
+    total = 0.0
+    for name, ts in g.tensors.items():
+        if ts.kind not in ("weight", "opt") and \
+                ts.role not in _PERSISTENT_ROLES:
+            continue
+        div = 1
+        for ax, assign in zip(axes, per_axis):
+            if isinstance(assign.get(name), Part):
+                div *= ax.size
+        total += ts.nbytes / div
+    return total
+
+
+def solve_mesh_capacity(g: Graph, axes: Sequence[MeshAxis],
+                        hbm: float = 16e9, budget_frac: float = 0.7,
+                        beam: Optional[int] = 50_000,
+                        max_rounds: int = 5) -> TilingSolution:
+    """Dual ascent on the capacity Lagrangian: solve, check the hard
+    per-device persistent-bytes budget, escalate the penalty scale until
+    the plan fits (beyond-paper: the paper's objective is communication
+    only and will happily replicate 64 GB of weights).
+
+    Once feasible, a *polish* pass re-solves with the persistent tensors
+    pinned to the feasible tilings and the penalty off — a very large λ
+    drowns the communication signal and yields feasible-but-awful plans
+    (observed on 32B prefill: λ escalation alone gave a zero-collective
+    plan with 10× the memory traffic)."""
+    from .cost import _PERSISTENT_ROLES
+    scale = 1.0
+    sol = None
+    for _ in range(max_rounds):
+        sol = solve_mesh(g, axes, beam=beam, mem_scale=scale)
+        used = persistent_bytes_per_device(g, axes, sol.per_axis)
+        if used <= budget_frac * hbm:
+            break
+        scale *= 8.0
+    if scale == 1.0 or sol is None:
+        return sol
+    # polish: pin persistent tilings, re-optimize the rest for comm only
+    fixed_per_axis: Dict[str, Assignment] = {}
+    for ax, assign in zip(axes, sol.per_axis):
+        pins: Assignment = {}
+        for name, ts in g.tensors.items():
+            if ts.kind in ("weight", "opt") or ts.role in _PERSISTENT_ROLES:
+                if name in assign:
+                    pins[name] = assign[name]
+        fixed_per_axis[ax.name] = pins
+    return solve_mesh(g, axes, fixed_per_axis=fixed_per_axis, beam=beam,
+                      mem_scale=0.0)
+
+
+def composed_cost(g: Graph, axes: Sequence[MeshAxis],
+                  per_axis: Sequence[Assignment],
+                  naive: bool = False) -> float:
+    """Total weighted bytes of an arbitrary composed tiling (for comparing
+    canonical DP/MP strategies against the solver's choice)."""
+    cur = g
+    groups = 1
+    total = 0.0
+    for ax, assign in zip(axes, per_axis):
+        total += graph_cost(cur, assign, ax.size, naive=naive) * groups
+        cur = cur.divided(assign, ax.size)
+        groups *= ax.size
+    return total
+
+
+def assignment_cost_naive(g: Graph, axes: Sequence[MeshAxis],
+                          per_axis: Sequence[Assignment]) -> float:
+    """Paper §2.2 parameter-server accounting of a composed tiling.
+    Consecutive axes with identical assignments are merged into one cut of
+    the product arity (Theorem 2 flattening) before pricing — this is how
+    the paper arrives at 57.6/76.8/33.6 MB for the 16-GPU MLP example."""
+    merged: List[Tuple[Assignment, int]] = []
+    for ax, assign in zip(axes, per_axis):
+        if merged and merged[-1][0] == assign:
+            merged[-1] = (assign, merged[-1][1] * ax.size)
+        else:
+            merged.append((assign, ax.size))
+    cur = g
+    groups = 1
+    total = 0.0
+    for assign, arity in merged:
+        total += graph_cost(cur, assign, arity, naive=True) * groups
+        cur = cur.divided(assign, arity)
+        groups *= arity
+    return total
+
+
+# Canonical whole-strategy assignments (paper §4.1) -------------------------
+
+def data_parallel_assignment(g: Graph, batch_dims: Sequence[str] = ("batch", "tok")
+                             ) -> Assignment:
+    """Replicate weights; partition everything else on its batch-like dim."""
+    from .tiling import Part
+    out: Assignment = {}
+    for name, ts in g.tensors.items():
+        if ts.kind == "weight" or not ts.dims:
+            out[name] = REPLICATE
+        else:
+            bdim = next((d for d in ts.dims if d in batch_dims), None)
+            out[name] = Part(bdim) if bdim else REPLICATE
+    return out
+
+
+def model_parallel_fixed(g: Graph, weight_dim_index: int = 0) -> Assignment:
+    """Pin every weight partitioned along one dim (the paper's §4.1 model
+    parallelism); activation tilings are then found by the solver."""
+    from .tiling import Part
+    fixed: Assignment = {}
+    for name, ts in g.tensors.items():
+        if ts.kind == "weight" and len(ts.dims) > weight_dim_index:
+            d = ts.dims[weight_dim_index]
+            fixed[name] = Part(d)
+    return fixed
+
+
+def canonical_mp_assignment(g: Graph) -> Assignment:
+    """The paper's §4.1 T_model, written out: weights row-partitioned
+    (P(dims[0])); activations column-partitioned (P(last dim)); weight
+    gradients follow their weight (local update); everything else
+    replicated."""
+    from .tiling import Part
+    weights = {n: ts for n, ts in g.tensors.items() if ts.kind == "weight"}
+    out: Assignment = {}
+    for name, ts in g.tensors.items():
+        if ts.kind == "weight":
+            out[name] = Part(ts.dims[0])
+        elif ts.kind in ("grad", "opt"):
+            base = name[2:] if name.startswith("d_") else name
+            base = base[4:] if base.startswith("opt:") else base
+            base = base.split("#")[0].split(".sum")[0]
+            w = weights.get(base)
+            out[name] = Part(w.dims[0]) if w is not None else REPLICATE
+        elif ts.dims:
+            out[name] = Part(ts.dims[-1])
+        else:
+            out[name] = REPLICATE
+    return out

@@ -1,0 +1,2 @@
+from .pipeline import (DataConfig, audio_frame_embeds, batches, host_batch,
+                       vision_patch_embeds)

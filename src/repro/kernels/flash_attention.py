@@ -1,0 +1,313 @@
+"""Flash attention for TPU in Pallas (forward + backward kernels).
+
+TPU adaptation (vs the CUDA flash algorithm): the grid's innermost
+dimension iterates *sequentially* on a TensorCore, so the online-softmax
+running state (m, l, acc) lives in VMEM scratch that persists across KV
+tiles — no atomics or shared-memory staging as on GPU.  Block shapes are
+(block_q × head_dim) / (block_k × head_dim) tiles sized for VMEM with the
+MXU's 128-lane alignment.
+
+Layout: q [B, Sq, H, hd] is processed per (b, h) with GQA mapping
+h -> kv_head = h // (H // KV).  Forward emits the softmax logsumexp for
+the backward kernels (dq and dk/dv), which recompute p tile-by-tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _row_mask(start, block, limit):
+    """[block] bool: which rows of a padded tile are in-bounds."""
+    return start + jax.lax.broadcasted_iota(jnp.int32, (block,), 0) < limit
+
+
+def _clean(x, valid):
+    """Zero padded rows (pallas pads OOB tiles with undefined values;
+    0 * NaN = NaN would otherwise poison the accumulators)."""
+    return jnp.where(valid[:, None], x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *,
+                scale, causal, window, block_q, block_k, sq, sk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kvalid = _row_mask(ki * block_k, block_k, sk)
+    qvalid = _row_mask(qi * block_q, block_q, sq)
+    q = _clean(q_ref[...].astype(jnp.float32), qvalid) * scale  # [bq, hd]
+    k = _clean(k_ref[...].astype(jnp.float32), kvalid)          # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = (k_pos < sk) & (q_pos < sq)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + p.sum(-1)
+    v = _clean(v_ref[...].astype(jnp.float32), kvalid)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot(p.astype(v.dtype), v))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[...] = (m_scr[...] + jnp.log(l)).astype(lse_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None,
+                        scale=None, block_q=128, block_k=128,
+                        interpret=False):
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(sk, block_k)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, sq=sq, sk=sk)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((None, None, block_q),
+                         lambda bb, hh, qi, ki: (bb, hh, qi)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+      v.transpose(0, 2, 1, 3))
+    return o.transpose(0, 2, 1, 3), lse
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_scr, *,
+                   scale, causal, window, block_q, block_k, sq, sk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    kvalid = _row_mask(ki * block_k, block_k, sk)
+    qvalid = _row_mask(qi * block_q, block_q, sq)
+    q = _clean(q_ref[...].astype(jnp.float32), qvalid) * scale
+    k = _clean(k_ref[...].astype(jnp.float32), kvalid)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = (k_pos < sk) & (q_pos < sq)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    p = jnp.where(mask, jnp.exp(s - lse_ref[...][:, None]), 0.0)
+    do = _clean(do_ref[...].astype(jnp.float32), qvalid)
+    v = _clean(v_ref[...].astype(jnp.float32), kvalid)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta_ref[...][:, None])
+    dq_scr[...] += jax.lax.dot(ds, k) * scale
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        dq_ref[...] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_scr, dv_scr, *,
+                    scale, causal, window, block_q, block_k, sq, sk):
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    kvalid = _row_mask(ki * block_k, block_k, sk)
+    qvalid = _row_mask(qi * block_q, block_q, sq)
+    qraw = _clean(q_ref[...].astype(jnp.float32), qvalid)
+    q = qraw * scale
+    k = _clean(k_ref[...].astype(jnp.float32), kvalid)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = (k_pos < sk) & (q_pos < sq)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    p = jnp.where(mask, jnp.exp(s - lse_ref[...][:, None]), 0.0)
+    do = _clean(do_ref[...].astype(jnp.float32), qvalid)
+    v = _clean(v_ref[...].astype(jnp.float32), kvalid)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta_ref[...][:, None])
+    dk_scr[...] += jax.lax.dot(ds.T, qraw) * scale
+    dv_scr[...] += jax.lax.dot(p.T, do)
+
+    @pl.when(qi == nq - 1)
+    def _fin():
+        dk_ref[...] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[...] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
+                        scale=None, block_q=128, block_k=128,
+                        interpret=False):
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(sk, block_k)
+    delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32),
+                    axis=-1).transpose(0, 2, 1)          # [B,H,Sq]
+
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    doT = do.transpose(0, 2, 1, 3)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q,
+                          block_k=block_k, sq=sq, sk=sk),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((None, None, block_q),
+                         lambda bb, hh, qi, ki: (bb, hh, qi)),
+            pl.BlockSpec((None, None, block_q),
+                         lambda bb, hh, qi, ki: (bb, hh, qi)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, hd),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        interpret=interpret,
+    )(qT, kT, vT, doT, lse, delta)
+
+    # dk/dv: accumulate over q-heads of the same kv group sequentially via
+    # the h grid axis mapping h -> kv head (output revisited g times).
+    dkv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q,
+                          block_k=block_k, sq=sq, sk=sk),
+        grid=(b, kv, nk, nq),
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda bb, hh, ki, qi: (bb, hh, qi, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bb, hh, ki, qi: (bb, hh, ki, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bb, hh, ki, qi: (bb, hh, ki, 0)),
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda bb, hh, ki, qi: (bb, hh, qi, 0)),
+            pl.BlockSpec((None, None, block_q),
+                         lambda bb, hh, ki, qi: (bb, hh, qi)),
+            pl.BlockSpec((None, None, block_q),
+                         lambda bb, hh, ki, qi: (bb, hh, qi)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bb, hh, ki, qi: (bb, hh, ki, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda bb, hh, ki, qi: (bb, hh, ki, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
+                        pltpu.VMEM((block_k, hd), jnp.float32)],
+        out_shape=(jax.ShapeDtypeStruct((b, kv, sk, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((b, kv, sk, hd), jnp.float32)),
+        interpret=interpret,
+    )
+    # run dkv once per q-head-group member, summing (keeps kernel simple
+    # and the per-call grid dense); g is small (<= H/KV).
+    dk = jnp.zeros((b, kv, sk, hd), jnp.float32)
+    dv = jnp.zeros((b, kv, sk, hd), jnp.float32)
+    for gi in range(g):
+        qg = qT[:, gi::g][:, :kv]
+        dog = doT[:, gi::g][:, :kv]
+        lseg = lse[:, gi::g][:, :kv]
+        deltag = delta[:, gi::g][:, :kv]
+        dki, dvi = dkv(qg, kT, vT, dog, lseg, deltag)
+        dk = dk + dki
+        dv = dv + dvi
+    return (dq.transpose(0, 2, 1, 3),
+            dk.transpose(0, 2, 1, 3).astype(k.dtype),
+            dv.transpose(0, 2, 1, 3).astype(v.dtype))

@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`flash_attention` carries a custom_vjp wired to the Pallas backward
+kernels.  On this CPU container the kernels execute in interpret mode
+(Pallas-TPU cannot compile to CPU); on a real TPU set interpret=False
+(the default flips on backend)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as fa
+from . import ssd as ssd_mod
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None):
+    o, _ = fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                  scale=scale,
+                                  interpret=_default_interpret())
+    return o
+
+
+def _fa_fwd(q, k, v, causal, window, scale):
+    o, lse = fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                    scale=scale,
+                                    interpret=_default_interpret())
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, window, scale, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = fa.flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, window=window, scale=scale,
+        interpret=_default_interpret())
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def ssd_chunk_scan(xh, a_log, bb, cc, chunk: int = 128):
+    return ssd_mod.ssd_chunk_scan(xh, a_log, bb, cc, chunk=chunk,
+                                  interpret=_default_interpret())

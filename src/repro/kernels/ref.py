@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None):
+    """Naive full-materialization attention.  q: [B,Sq,H,hd];
+    k/v: [B,Sk,KV,hd] (GQA)."""
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.reshape(b, sq, kv, g, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqKgd,bkKd->bKgqk", qf, k.astype(jnp.float32))
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bKgqk,bkKd->bqKgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def ssd_ref(xh, a_log, bb, cc):
+    """Sequential state-space recurrence (the SSD oracle).
+    xh: [B,S,H,P] (dt folded in), a_log: [B,S,H], bb/cc: [B,S,N].
+    h_t = exp(a_log_t) h_{t-1} + x_t ⊗ B_t ;  y_t = C_t · h_t."""
+    b, s, h, p = xh.shape
+    n = bb.shape[-1]
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = (state * jnp.exp(a_t)[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", x_t, b_t))
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    state, ys = jax.lax.scan(
+        step, init,
+        (xh.swapaxes(0, 1).astype(jnp.float32),
+         a_log.swapaxes(0, 1).astype(jnp.float32),
+         bb.swapaxes(0, 1).astype(jnp.float32),
+         cc.swapaxes(0, 1).astype(jnp.float32)))
+    return ys.swapaxes(0, 1), state

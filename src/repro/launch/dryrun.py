@@ -1,0 +1,390 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: for every (architecture × input shape × mesh),
+solve the tiling, build the sharded step function, .lower().compile(),
+and record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and only the dry-run wants 512 placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k --mesh single            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out experiments/dryrun                  # the full table
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+import dataclasses
+
+from ..analysis import roofline as rf
+from ..configs.base import ASSIGNED, SHAPES, ArchConfig, ShapeConfig, get_arch
+from ..core.builders import build_graph
+from ..core.plan import ShardingPlan
+from ..core.solver import solve_mesh
+from ..models import attention as attention_mod
+from ..models.model import LM
+from ..models.sharding import (CACHE_RULES, batch_pspec, tree_shardings)
+from ..optim.adamw import AdamWConfig, apply_updates, init_state
+from .mesh import make_production_mesh, solver_axes
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         ".cache", "plans")
+
+
+# ---------------------------------------------------------------------------
+# solver plan with on-disk cache
+# ---------------------------------------------------------------------------
+
+def plan_cache_path(arch: str, shape: str, mesh_name: str) -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    return os.path.join(CACHE_DIR, f"{arch}_{shape}_{mesh_name}.json")
+
+
+def solve_plan(cfg: ArchConfig, shape: ShapeConfig, multi_pod: bool,
+               use_cache: bool = True,
+               capacity: bool = False) -> Dict[str, Any]:
+    mesh_name = ("pod2" if multi_pod else "pod1") +         ("_cap" if capacity else "")
+    path = plan_cache_path(cfg.name, shape.name, mesh_name)
+    if use_cache and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    g = build_graph(cfg, shape)
+    axes = solver_axes(multi_pod=multi_pod)
+    t0 = time.time()
+    if capacity:
+        from ..core.solver import solve_mesh_capacity
+        sol = solve_mesh_capacity(g, axes, beam=8000)
+    else:
+        sol = solve_mesh(g, axes, beam=8000)
+    plan = ShardingPlan.from_graph_solution(sol, g)
+    rec = {
+        "mesh_axes": list(plan.mesh_axis_names),
+        "role_cuts": plan.role_cuts,
+        "total_bytes": sol.total_bytes,
+        "per_axis_bytes": sol.per_axis_bytes,
+        "total_seconds": sol.total_seconds,
+        "solve_time": time.time() - t0,
+    }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def plan_from_record(rec: Dict[str, Any]) -> ShardingPlan:
+    return ShardingPlan(tuple(rec["mesh_axes"]),
+                        {r: dict(c) for r, c in rec["role_cuts"].items()})
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.embed_stub:
+            return {"tokens": jax.ShapeDtypeStruct((b, cfg.d_model),
+                                                   jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    specs: Dict[str, Any] = {}
+    if cfg.embed_stub:
+        specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.bfloat16)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def normalize_moe_plan(plan: ShardingPlan, cfg: ArchConfig,
+                       axis: str = "model") -> ShardingPlan:
+    """The shard_map MoE dispatch supports expert-dim sharding on one
+    axis (standard expert parallelism); pin the expert-weight roles to
+    that canonical layout."""
+    if cfg.moe is None:
+        return plan
+    full = {a: None for a in plan.mesh_axis_names}
+    ep = dict(full)
+    if cfg.moe.n_experts % 16 == 0:
+        ep[axis] = "expert"
+    for role in ("moe_up", "moe_down"):
+        plan = plan.with_override(role, dict(ep))
+    plan = plan.with_override("moe_gate", dict(full))
+    return plan
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None,
+             use_cache: bool = True,
+             capacity: bool = False) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2" if multi_pod else "pod1"
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": "full-attention arch: long_500k needs "
+                         "sub-quadratic attention (DESIGN.md)"}
+        _write(out_dir, rec)
+        return rec
+
+    t_start = time.time()
+    prec = solve_plan(cfg, shape, multi_pod, use_cache, capacity)
+    plan = normalize_moe_plan(plan_from_record(prec), cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    ins = input_specs(cfg, shape)
+
+    compiled, t_lower, t_compile = _compile_step(
+        cfg, shape, plan, mesh, ins, layer_loop="scan")
+    t_lower -= t_start - t_start  # keep names
+
+    mf = rf.model_train_flops(cfg, shape)
+    text = compiled.as_text()
+    roof = rf.analyze(compiled, text, n_dev, mf, arch, shape_name,
+                      mesh_name)
+
+    # --- depth-probe extrapolation: XLA cost_analysis counts a while
+    # body once, so compile two shallow *unrolled* variants and
+    # extrapolate the per-device terms linearly in L (exact: layers are
+    # identical).  The full-depth scan compile above remains the
+    # pass/fail + memory_analysis artifact.
+    d1, d2 = _probe_depths(cfg)
+    probes = {}
+    attention_mod.DEFAULT_UNROLL = True
+    try:
+        for d in (d1, d2):
+            cfg_d = dataclasses.replace(cfg, n_layers=d)
+            comp_d, _, _ = _compile_step(cfg_d, shape, plan, mesh, ins,
+                                         layer_loop="unrolled")
+            probes[d] = rf.analyze(
+                comp_d, comp_d.as_text(), n_dev,
+                rf.model_train_flops(cfg_d, shape), arch, shape_name,
+                mesh_name)
+    finally:
+        attention_mod.DEFAULT_UNROLL = False
+    L = cfg.n_layers
+
+    def extrap(attr):
+        a = getattr(probes[d1], attr)
+        b2 = getattr(probes[d2], attr)
+        return b2 + (b2 - a) / (d2 - d1) * (L - d2)
+
+    roof.flops_per_dev = extrap("flops_per_dev")
+    roof.hbm_bytes_per_dev = extrap("hbm_bytes_per_dev")
+    roof.wire_bytes_per_dev = extrap("wire_bytes_per_dev")
+    roof.naive_collective_bytes = extrap("naive_collective_bytes")
+    roof.flops_per_dev += _slstm_correction(cfg, shape, plan, n_dev)
+
+    # compulsory-traffic bound for the memory term
+    params_b = rf.tree_bytes(jax.eval_shape(
+        LM(cfg, plan=plan).init, jax.random.PRNGKey(0)))
+    if shape.kind == "decode":
+        state_b = rf.tree_bytes(jax.eval_shape(
+            lambda: LM(cfg, plan=plan).init_cache(shape.global_batch,
+                                                  shape.seq_len)))
+    elif shape.kind == "train":
+        state_b = params_b * 4.0   # fp32 m+v over bf16 params
+    else:
+        state_b = 0.0
+    roof.ideal_bytes_per_dev = rf.ideal_step_bytes(
+        params_b, state_b, shape.kind, n_dev)
+
+    mem_str = ""
+    try:
+        mem_str = str(compiled.memory_analysis())
+    except Exception:
+        pass
+    rec = dict(roof.to_dict(), status="ok", lower_s=t_lower,
+               compile_s=t_compile, memory_analysis=mem_str,
+               solver_bytes=prec["total_bytes"],
+               solver_per_axis=prec["per_axis_bytes"],
+               probe_depths=[d1, d2],
+               probe_flops=[probes[d1].flops_per_dev,
+                            probes[d2].flops_per_dev])
+    _write(out_dir, rec)
+    return rec
+
+
+def _probe_depths(cfg: ArchConfig):
+    if cfg.family == "hybrid" and cfg.attn_every:
+        return (cfg.attn_every, 2 * cfg.attn_every)
+    if cfg.xlstm is not None:
+        return (2, 4)
+    return (1, 2)
+
+
+def _batch_shard(plan, n_default=1):
+    """How many mesh-axis ways the batch dim is cut (for analytic
+    corrections)."""
+    cuts = plan.role_cuts.get("x", {})
+    ways = 1
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    for ax, d in cuts.items():
+        if d in ("batch", "seq"):
+            ways *= sizes.get(ax, 1)
+    return max(ways, n_default)
+
+
+def _slstm_correction(cfg, shape, plan, n_dev) -> float:
+    """sLSTM's hidden-to-hidden recurrence runs inside a lax.scan over
+    time that even the probes count once; add the missing (S-1) steps
+    analytically (xlstm archs only)."""
+    if cfg.xlstm is None or shape.kind == "decode":
+        return 0.0
+    b = shape.global_batch // _batch_shard(plan)
+    s = shape.seq_len
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    per_step = 2.0 * b * cfg.n_heads * hd * 4 * hd
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd recompute
+    return mult * (s - 1) * per_step * (cfg.n_layers / 2)
+
+
+def _compile_step(cfg, shape, plan, mesh, ins, layer_loop):
+    t0 = time.time()
+    model = LM(cfg, plan=plan, attn_impl="xla", mesh=mesh,
+               layer_loop=layer_loop)
+    key = jax.random.PRNGKey(0)
+    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+        params_s = jax.eval_shape(model.init, key)
+        params_sh = tree_shardings(plan, params_s, mesh)
+        if shape.kind == "decode":
+            cache_s = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch,
+                                         shape.seq_len))
+            cache_sh = tree_shardings(plan, cache_s, mesh,
+                                      rules=CACHE_RULES)
+            tok_sh = jax.sharding.NamedSharding(
+                mesh, batch_pspec(plan, "decode"))
+
+            def serve_step(params, cache, tokens):
+                return model.decode_step(params, cache, tokens)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(params_sh, cache_sh, tok_sh))
+            lowered = jitted.lower(params_s, cache_s, ins["tokens"])
+        elif shape.kind == "prefill":
+            bsh = jax.sharding.NamedSharding(mesh,
+                                             batch_pspec(plan, "prefill"))
+            in_sh = (params_sh,
+                     {k: bsh for k in ins})
+
+            def prefill_step(params, batch):
+                logits, _ = model.forward(params, batch.get("tokens"),
+                                          batch.get("embeds"))
+                return logits
+
+            jitted = jax.jit(prefill_step, in_shardings=in_sh)
+            lowered = jitted.lower(params_s, ins)
+        else:
+            opt_s = jax.eval_shape(init_state, params_s)
+            opt_sh = tree_shardings(plan, opt_s, mesh)
+            bspec = batch_pspec(plan, "train")
+            b_sh = {k: jax.sharding.NamedSharding(
+                        mesh, bspec["tokens"] if k != "embeds"
+                        else batch_pspec(plan, "prefill"))
+                    for k in ins}
+            ocfg = AdamWConfig()
+
+            def train_step(params, opt, batch):
+                def loss_fn(p):
+                    return model.loss(p, batch)
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                params2, opt2, gnorm = apply_updates(params, grads, opt,
+                                                     ocfg)
+                return params2, opt2, loss, gnorm
+
+            jitted = jax.jit(train_step,
+                             in_shardings=(params_sh, opt_sh, b_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_s, opt_s, ins)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _write(out_dir, rec):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--capacity", action="store_true",
+                    help="capacity-aware (dual-ascent) tiling solve")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ASSIGNED if args.all or not args.arch else [args.arch]
+    shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+              if args.all or not args.shape else [args.shape])
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in pods:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        mesh_name = "pod2" if mp else "pod1"
+        out_path = os.path.join(args.out, f"{a}_{s}_{mesh_name}.json")
+        if args.skip_existing and os.path.exists(out_path):
+            print(f"[skip existing] {a} {s} {mesh_name}")
+            continue
+        t0 = time.time()
+        try:
+            rec = run_cell(a, s, mp, args.out,
+                           use_cache=not args.no_cache,
+                           capacity=args.capacity)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                extra = (f"dom={rec['dominant']} "
+                         f"tc={rec['t_compute']:.3e} "
+                         f"tm={rec['t_memory']:.3e} "
+                         f"tx={rec['t_collective']:.3e} "
+                         f"frac={rec['roofline_fraction']:.2f}")
+            print(f"[{status}] {a} {s} {mesh_name} "
+                  f"({time.time()-t0:.0f}s) {extra}", flush=True)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            _write(args.out, {"arch": a, "shape": s,
+                              "mesh": mesh_name, "status": "error",
+                              "error": str(e)})
+            print(f"[ERROR] {a} {s} {mesh_name}: {e}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver (§Perf): re-measure one dry-run cell with the
+current code + optional plan overrides / capacity-escalated solve, and
+print the three roofline terms plus the top collectives by wire bytes.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch qwen2.5-32b --shape train_4k \
+      --capacity --override wq=model:heads --tag iter1
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+
+from ..analysis import hlo, roofline as rf
+from ..configs.base import SHAPES, get_arch
+from ..core.builders import build_graph
+from ..core.plan import ShardingPlan
+from ..core.solver import (persistent_bytes_per_device,
+                           solve_mesh_capacity)
+from ..launch import dryrun as dr
+from ..launch.mesh import make_production_mesh, solver_axes
+from ..models.model import LM
+
+
+def top_collectives(text: str, n: int = 12):
+    """(kind, result shape, group size, wire bytes) sorted desc."""
+    out = []
+    for line in text.splitlines():
+        m = hlo._OP_RE.match(line)
+        if not m or "-done(" in line:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        s = hlo.shape_bytes(shape_str)
+        g = hlo._group_size(line, 256)
+        if kind == "all-reduce":
+            wire = 2 * s * (g - 1) / g
+        elif kind == "all-gather":
+            wire = s * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = s * (g - 1)
+        elif kind == "all-to-all":
+            wire = s * (g - 1) / g
+        else:
+            wire = s
+        out.append((kind, shape_str.strip()[:60], g, wire))
+    return sorted(out, key=lambda x: -x[3])[:n]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--capacity", action="store_true",
+                    help="re-solve with the capacity dual ascent")
+    ap.add_argument("--override", action="append", default=[],
+                    help="role=axis:dim[,axis:dim]  (dim '-' = None)")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n_dev = mesh.devices.size
+    mesh_name = "pod2" if args.multi_pod else "pod1"
+
+    if args.capacity:
+        g = build_graph(cfg, shape)
+        t0 = time.time()
+        sol = solve_mesh_capacity(g, solver_axes(multi_pod=args.multi_pod),
+                                  beam=8000)
+        plan = ShardingPlan.from_graph_solution(sol, g)
+        print(f"capacity solve {time.time()-t0:.0f}s, persistent/dev = "
+              f"{persistent_bytes_per_device(g, solver_axes(multi_pod=args.multi_pod), sol.per_axis)/1e9:.2f} GB")
+    else:
+        prec = dr.solve_plan(cfg, shape, args.multi_pod, use_cache=True)
+        plan = dr.plan_from_record(prec)
+
+    for ov in args.override:
+        role, cuts_s = ov.split("=")
+        cuts = {}
+        for part in cuts_s.split(","):
+            ax, dim = part.split(":")
+            cuts[ax] = None if dim == "-" else dim
+        full = {a: None for a in plan.mesh_axis_names}
+        full.update(cuts)
+        plan = plan.with_override(role, full)
+        print(f"override {role} -> {full}")
+
+    print("plan:")
+    print(plan.describe())
+
+    ins = dr.input_specs(cfg, shape)
+    compiled, t_lower, t_compile = dr._compile_step(
+        cfg, shape, plan, mesh, ins, layer_loop="scan")
+    roof = rf.analyze(compiled, compiled.as_text(), n_dev,
+                      rf.model_train_flops(cfg, shape), args.arch,
+                      args.shape, mesh_name)
+
+    from ..models import attention as attention_mod
+    import dataclasses
+    d1, d2 = dr._probe_depths(cfg)
+    probes = {}
+    attention_mod.DEFAULT_UNROLL = True
+    try:
+        for d in (d1, d2):
+            cfg_d = dataclasses.replace(cfg, n_layers=d)
+            comp_d, _, _ = dr._compile_step(cfg_d, shape, plan, mesh, ins,
+                                            layer_loop="unrolled")
+            probes[d] = rf.analyze(comp_d, comp_d.as_text(), n_dev,
+                                   rf.model_train_flops(cfg_d, shape),
+                                   args.arch, args.shape, mesh_name)
+            if d == d2:
+                probe_text = comp_d.as_text()
+    finally:
+        attention_mod.DEFAULT_UNROLL = False
+
+    L = cfg.n_layers
+
+    def extrap(attr):
+        a, b = getattr(probes[d1], attr), getattr(probes[d2], attr)
+        return b + (b - a) / (d2 - d1) * (L - d2)
+
+    roof.flops_per_dev = extrap("flops_per_dev")
+    roof.hbm_bytes_per_dev = extrap("hbm_bytes_per_dev")
+    roof.wire_bytes_per_dev = extrap("wire_bytes_per_dev")
+    roof.flops_per_dev += dr._slstm_correction(cfg, shape, plan, n_dev)
+
+    print(f"\n== {args.arch} {args.shape} {mesh_name} [{args.tag}] ==")
+    print(f"tc={roof.t_compute:.3e}  tm={roof.t_memory:.3e}  "
+          f"tx={roof.t_collective:.3e}  dom={roof.dominant}  "
+          f"mfu_bound={roof.roofline_fraction:.4f}  "
+          f"useful={roof.useful_ratio:.3f}")
+    print(f"compile {t_compile:.0f}s; collectives (2-layer probe, "
+          f"top by wire bytes):")
+    for kind, sh, g, wire in top_collectives(probe_text):
+        print(f"  {kind:20s} g={g:<4d} {wire/1e9:8.3f} GB  {sh}")
+
+    os.makedirs(args.out, exist_ok=True)
+    rec = dict(roof.to_dict(), tag=args.tag, compile_s=t_compile,
+               overrides=args.override, capacity=args.capacity)
+    path = os.path.join(
+        args.out, f"{args.arch}_{args.shape}_{mesh_name}_{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

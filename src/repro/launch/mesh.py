@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state.  Axis order is slowest-interconnect-first — the paper's
+§5.1 placement rule: the k-cut solver assigns its first (highest-weight)
+cut to the slowest tier."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from ..core.solver import MeshAxis
+
+# TPU v5e-class hardware constants (used by the roofline + solver weights)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS_PER_AXIS = 2       # bidirectional ring along a torus dim
+DCN_BW = 6.25e9              # inter-pod (pod axis) per host, ~50 Gb/s
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def solver_axes(*, multi_pod: bool = False) -> List[MeshAxis]:
+    """MeshAxis list for the tiling solver, slowest first, with per-axis
+    bandwidths (pod crosses DCN; data/model ride ICI)."""
+    ici = ICI_BW * ICI_LINKS_PER_AXIS
+    axes = [MeshAxis("data", 16, ici), MeshAxis("model", 16, ici)]
+    if multi_pod:
+        axes = [MeshAxis("pod", 2, DCN_BW)] + axes
+    return axes
+
+
+def make_demo_mesh(n_data: int = 4, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (host device count permits)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Runs a real (CPU-sized or TPU) training job with the solver-derived
+sharding plan.  On this container use a reduced config + host-device
+mesh, e.g.:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --steps 30 --mesh 4x2 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from ..configs.base import SHAPES, get_arch
+from ..core.builders import transformer_graph
+from ..core.plan import ShardingPlan
+from ..core.solver import MeshAxis, solve_mesh
+from ..data.pipeline import DataConfig
+from ..models.model import LM
+from ..optim.adamw import AdamWConfig
+from ..runtime.train_loop import TrainConfig, train
+from ..configs.base import ShapeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 4x2 => data=4, model=2 (needs host devices)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    plan = None
+    mesh_ctx = None
+    if args.mesh:
+        nd, nm = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh(
+            (nd, nm), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        shape = ShapeConfig("cli", args.seq, args.batch, "train")
+        g = transformer_graph(cfg, shape)
+        sol = solve_mesh(g, [MeshAxis("data", nd), MeshAxis("model", nm)],
+                         beam=4000)
+        plan = ShardingPlan.from_graph_solution(sol, g)
+        print("solver plan:")
+        print(plan.describe())
+        mesh_ctx = jax.set_mesh(mesh)
+
+    model = LM(cfg, plan=plan)
+    dcfg = DataConfig(seed=args.seed, vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    tcfg = TrainConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, grad_compression=args.grad_compression,
+        optim=AdamWConfig(lr=args.lr, total_steps=args.steps))
+
+    if mesh_ctx is not None:
+        with mesh_ctx:
+            out = train(model, dcfg, tcfg)
+    else:
+        out = train(model, dcfg, tcfg)
+    hist = out["history"]
+    print(json.dumps({"first_loss": hist[0]["loss"],
+                      "last_loss": hist[-1]["loss"],
+                      "steps": len(hist)}))
+
+
+if __name__ == "__main__":
+    main()

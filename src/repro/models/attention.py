@@ -1,0 +1,111 @@
+"""GQA attention: XLA chunked (flash-style online-softmax) path used for
+training/prefill and the CPU dry-run; the Pallas TPU kernel in
+repro.kernels is selected with impl="pallas" (validated in interpret mode
+— Pallas-TPU cannot compile on the CPU backend, see DESIGN.md)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import causal_mask
+
+NEG_INF = -1e30
+
+# dry-run probe mode: a single KV chunk removes the kv lax.scan so XLA
+# cost_analysis counts attention flops exactly (see analysis/roofline)
+DEFAULT_K_CHUNK = 1024
+DEFAULT_UNROLL = False
+
+
+def _gqa_expand(q, kv_heads):
+    """view q [B,S,H,hd] as [B,S,KV,G,hd] (G = H // KV)."""
+    b, s, h, hd = q.shape
+    g = h // kv_heads
+    return q.reshape(b, s, kv_heads, g, hd)
+
+
+def flash_attention_xla(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int = 0, k_chunk: Optional[int] = None,
+                        scale: Optional[float] = None):
+    """Online-softmax attention, scanning KV chunks (O(S·kc) memory).
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, KV, hd] with H % KV == 0.
+    Returns [B, Sq, H, hd].
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qf = _gqa_expand(q, kv).astype(jnp.float32) * scale
+
+    k_chunk = min(k_chunk or DEFAULT_K_CHUNK, sk)
+    n_chunks = (sk + k_chunk - 1) // k_chunk
+    pad = n_chunks * k_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, k_chunk, kv, hd)
+    vc = v.reshape(b, n_chunks, k_chunk, kv, hd)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ki, vi, idx = inp
+        # scores: [B, Sq, KV, G, kc]
+        s = jnp.einsum("bsKgd,bcKd->bsKgc", qf, ki.astype(jnp.float32))
+        k_off = idx * k_chunk
+        mask = causal_mask(sq, k_chunk, q_offset, k_off,
+                           window)[None, :, None, None, :]
+        valid = (k_off + jnp.arange(k_chunk) < sk)[None, None, None, None, :]
+        if causal:
+            s = jnp.where(mask & valid, s, NEG_INF)
+        else:
+            s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bsKgc,bcKd->bsKgd", p, vi.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)),
+        unroll=n_chunks if DEFAULT_UNROLL else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attend_cache(q, k_cache, v_cache, length, *,
+                 window: Optional[int] = None,
+                 scale: Optional[float] = None):
+    """Decode attention: q [B, H, hd] against caches [B, S, KV, hd];
+    ``length`` [B] = number of valid cache entries (new token already
+    written at position length-1)."""
+    b, h, hd = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q.reshape(b, kv, g, hd)).astype(jnp.float32) * scale
+    sc = jnp.einsum("bKgd,bcKd->bKgc", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(s)[None, :]
+    valid = pos < length[:, None]
+    if window is not None:
+        valid &= pos >= (length[:, None] - window)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bKgc,bcKd->bKgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "xla", **kw):
+    if impl == "pallas":
+        from ..kernels import ops as kops
+        return kops.flash_attention(q, k, v, **kw)
+    return flash_attention_xla(q, k, v, **kw)

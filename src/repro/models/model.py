@@ -1,0 +1,455 @@
+"""The LM model family: dense GQA / MoE / Mamba2-SSM / zamba-hybrid /
+xLSTM / VLM & audio backbones — one functional implementation, stacked
+layer params scanned with per-layer remat.
+
+Params are plain nested dicts of jnp arrays.  Layer stacks carry a
+leading [L] axis and run under jax.lax.scan so the compiled HLO is one
+layer body regardless of depth (essential for the 80-layer dry-runs)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attention_mod
+from .attention import attend_cache, attention
+from .common import (dense_init, embed_init, rms_norm, rope, shard,
+                     softmax_cross_entropy)
+from .mamba import (init_mamba, init_mamba_state, mamba_forward, mamba_step)
+from .moe import init_moe, moe_ffn
+from .xlstm import (init_mlstm, init_mlstm_state, init_slstm,
+                    init_slstm_state, mlstm_forward, mlstm_step,
+                    slstm_forward, slstm_step)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ArchConfig, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _init_mlp(key, cfg: ArchConfig, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(ks[0], (d, f), dtype=dtype),
+        "wu": dense_init(ks[1], (d, f), dtype=dtype),
+        "wd": dense_init(ks[2], (f, d), dtype=dtype),
+    }
+
+
+def _init_dense_layer(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+         "attn": _init_attn(k1, cfg, dtype)}
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = _init_mlp(k2, cfg, dtype)
+    return p
+
+
+def _stack(key, n: int, fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# forward blocks
+# ---------------------------------------------------------------------------
+
+def _attn_forward(p, x, cfg: ArchConfig, positions, plan, impl):
+    b, s, d = x.shape
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard(q, plan, "wq.out", ("batch", "seq", "heads"))
+    q = rope(q.reshape(b, s, h, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, s, kv, hd), positions, cfg.rope_theta)
+    v = v.reshape(b, s, kv, hd)
+    o = attention(q, k, v, causal=True, window=cfg.swa_window, impl=impl)
+    return o.reshape(b, s, h * hd) @ p["wo"]
+
+
+def _mlp_forward(p, x):
+    g = jax.nn.silu((x @ p["wg"]).astype(jnp.float32)).astype(x.dtype)
+    return (g * (x @ p["wu"])) @ p["wd"]
+
+
+def _dense_layer_forward(p, x, cfg: ArchConfig, positions, plan, impl,
+                         mesh=None):
+    # constrain the *post-norm* activations too: their f32 cotangents
+    # otherwise lose sharding and GSPMD all-gathers them into the
+    # weight-gradient dots (8.5 GB/layer in the dry-run — §Perf)
+    xn1 = shard(rms_norm(x, p["ln1"], cfg.norm_eps), plan, "x",
+                ("batch", "seq", "d_model"))
+    h = _attn_forward(p["attn"], xn1, cfg, positions, plan, impl)
+    x = x + h
+    x = shard(x, plan, "x", ("batch", "seq", "d_model"))
+    xn = shard(rms_norm(x, p["ln2"], cfg.norm_eps), plan, "x",
+               ("batch", "seq", "d_model"))
+    if cfg.moe is not None:
+        y, aux = moe_ffn(p["moe"], xn, cfg, plan, mesh)
+    else:
+        y, aux = _mlp_forward(p["mlp"], xn), 0.0
+    x = x + y
+    return shard(x, plan, "x", ("batch", "seq", "d_model")), aux
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LM:
+    cfg: ArchConfig
+    plan: Any = None                 # ShardingPlan or None
+    attn_impl: str = "xla"           # "xla" | "pallas"
+    mesh: Any = None                 # needed for shard_map MoE dispatch
+    # "scan": lax.scan over stacked layers (production; one-layer HLO).
+    # "unrolled": python loop — used by the dry-run cost probes because
+    # XLA cost_analysis counts a while body once (see analysis/roofline).
+    layer_loop: str = "scan"
+
+    def _fold(self, body, x, stacked):
+        """scan-or-unroll over the leading layer axis; body returns
+        (x, per-layer-out)."""
+        if self.layer_loop == "scan":
+            return jax.lax.scan(body, x, stacked)
+        n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        outs = []
+        for i in range(n):
+            p = jax.tree_util.tree_map(lambda a: a[i], stacked)
+            x, o = body(x, p)
+            outs.append(o)
+        if outs and outs[0] is not None:
+            outs = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            outs = None
+        return x, outs
+
+    # -- init ------------------------------------------------------------
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        k_embed, k_layers, k_head, k_extra = jax.random.split(key, 4)
+        params: Dict[str, PyTree] = {
+            "embed": embed_init(k_embed, (cfg.vocab, cfg.d_model), dtype),
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                k_head, (cfg.d_model, cfg.vocab), dtype=dtype)
+        L = cfg.n_layers
+        if cfg.family == "hybrid" and cfg.attn_every:
+            params["mamba"] = _stack(
+                k_layers, L, lambda k: dict(
+                    init_mamba(k, cfg, dtype),
+                    ln=jnp.ones((cfg.d_model,), jnp.float32)))
+            params["shared"] = _init_dense_layer(k_extra, cfg, dtype)
+        elif cfg.xlstm is not None:
+            k1, k2 = jax.random.split(k_layers)
+            params["slstm"] = _stack(
+                k1, L // 2, lambda k: dict(
+                    init_slstm(k, cfg, dtype),
+                    ln=jnp.ones((cfg.d_model,), jnp.float32)))
+            params["mlstm"] = _stack(
+                k2, L // 2, lambda k: dict(
+                    init_mlstm(k, cfg, dtype),
+                    ln=jnp.ones((cfg.d_model,), jnp.float32)))
+        elif cfg.family == "ssm":
+            params["mamba"] = _stack(
+                k_layers, L, lambda k: dict(
+                    init_mamba(k, cfg, dtype),
+                    ln=jnp.ones((cfg.d_model,), jnp.float32)))
+        else:
+            params["layers"] = _stack(
+                k_layers, L, lambda k: _init_dense_layer(k, cfg, dtype))
+        return params
+
+    # -- embedding -------------------------------------------------------
+    def _embed(self, params, tokens=None, embeds=None):
+        if embeds is not None:
+            x = embeds.astype(params["embed"].dtype)
+        else:
+            x = params["embed"][tokens]
+        return shard(x, self.plan, "x",
+                     ("batch", "seq", "d_model")[:x.ndim - 1] + ("d_model",))
+
+    def _head(self, params, x):
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["lm_head"])
+        logits = x @ w
+        dims = ("batch", "seq", "vocab") if x.ndim == 3 else ("batch", "vocab")
+        return shard(logits, self.plan, "logits", dims)
+
+    # -- forward (train / prefill) ----------------------------------------
+    def forward(self, params, tokens=None, embeds=None) -> Tuple[jnp.ndarray,
+                                                                 jnp.ndarray]:
+        """-> (logits [B,S,V], aux_loss scalar)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.family == "hybrid" and cfg.attn_every:
+            period = cfg.attn_every
+
+            def mamba_body(x, p):
+                xn = shard(rms_norm(x, p["ln"], cfg.norm_eps), self.plan,
+                           "x", ("batch", "seq", "d_model"))
+                y = mamba_forward(p, xn, cfg, self.plan)
+                return shard(x + y, self.plan, "x",
+                             ("batch", "seq", "d_model"))
+
+            mb = jax.tree_util.tree_map(
+                lambda a: a.reshape((cfg.n_layers // period, period)
+                                    + a.shape[1:]), params["mamba"])
+
+            def outer(x, pgrp):
+                def inner(xc, p):
+                    return jax.checkpoint(mamba_body)(xc, p), None
+                x, _ = jax.lax.scan(inner, x, pgrp)
+                x, aux = jax.checkpoint(
+                    lambda xx: _dense_layer_forward(
+                        params["shared"], xx, cfg, positions, self.plan,
+                        self.attn_impl, self.mesh))(x)
+                return x, aux
+
+            x, auxs = self._fold(outer, x, mb)
+            aux_total += jnp.sum(auxs)
+        elif cfg.xlstm is not None:
+            def pair_body(x, ps):
+                ps_s, ps_m = ps
+                x = x + slstm_forward(ps_s, rms_norm(x, ps_s["ln"],
+                                                     cfg.norm_eps), cfg)
+                x = x + mlstm_forward(ps_m, rms_norm(x, ps_m["ln"],
+                                                     cfg.norm_eps), cfg)
+                return shard(x, self.plan, "x", ("batch", "seq", "d_model"))
+
+            def scan_fn(x, ps):
+                return jax.checkpoint(pair_body)(x, ps), None
+
+            x, _ = self._fold(scan_fn, x,
+                              (params["slstm"], params["mlstm"]))
+        elif cfg.family == "ssm":
+            def body(x, p):
+                xn = shard(rms_norm(x, p["ln"], cfg.norm_eps), self.plan,
+                           "x", ("batch", "seq", "d_model"))
+                y = mamba_forward(p, xn, cfg, self.plan)
+                return shard(x + y, self.plan, "x",
+                             ("batch", "seq", "d_model"))
+
+            def scan_fn(x, p):
+                return jax.checkpoint(body)(x, p), None
+
+            x, _ = self._fold(scan_fn, x, params["mamba"])
+        else:
+            def body(x, p):
+                return _dense_layer_forward(p, x, cfg, positions, self.plan,
+                                            self.attn_impl, self.mesh)
+
+            def scan_fn(x, p):
+                x, aux = jax.checkpoint(body)(x, p)
+                return x, aux
+
+            x, auxs = self._fold(scan_fn, x, params["layers"])
+            aux_total += jnp.sum(auxs)
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return self._head(params, x), aux_total
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits, aux = self.forward(params, batch.get("tokens"),
+                                   batch.get("embeds"))
+        ce = softmax_cross_entropy(logits, batch["labels"], self.cfg.vocab)
+        return ce + 0.01 * aux
+
+    # -- decode ------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> PyTree:
+        cfg = self.cfg
+        hd, kv = cfg.hd, cfg.n_kv_heads
+        L = cfg.n_layers
+
+        def kvc(n, length):
+            return {
+                "k": jnp.zeros((n, batch, length, kv, hd), jnp.bfloat16),
+                "v": jnp.zeros((n, batch, length, kv, hd), jnp.bfloat16),
+            }
+
+        cache: Dict[str, PyTree] = {
+            "pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family == "hybrid" and cfg.attn_every:
+            n_shared = cfg.n_layers // cfg.attn_every
+            win = min(max_len, (cfg.swa_window or 4096)
+                      if max_len > 65536 else max_len)
+            cache["mamba"] = jax.tree_util.tree_map(
+                lambda a: jnp.stack([a] * L),
+                init_mamba_state(cfg, batch))
+            cache["shared"] = kvc(n_shared, win)
+        elif cfg.xlstm is not None:
+            cache["slstm"] = jax.tree_util.tree_map(
+                lambda a: jnp.stack([a] * (L // 2)),
+                init_slstm_state(cfg, batch))
+            cache["mlstm"] = jax.tree_util.tree_map(
+                lambda a: jnp.stack([a] * (L // 2)),
+                init_mlstm_state(cfg, batch))
+        elif cfg.family == "ssm":
+            cache["mamba"] = jax.tree_util.tree_map(
+                lambda a: jnp.stack([a] * L),
+                init_mamba_state(cfg, batch))
+        else:
+            cache["kv"] = kvc(L, min(max_len,
+                                     cfg.swa_window or max_len)
+                              if cfg.swa_window else max_len)
+        return cache
+
+    def _attn_decode(self, p, x, kv_cache, pos, cfg, win):
+        """x: [B, D]; kv_cache: {"k","v"} [B, S, KV, hd] for ONE layer."""
+        b, d = x.shape
+        hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        q = x @ p["wq"]
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = rope(q.reshape(b, 1, h, hd), pos[:, None],
+                 cfg.rope_theta)[:, 0]
+        k = rope(k.reshape(b, 1, kvh, hd), pos[:, None],
+                 cfg.rope_theta)[:, 0]
+        v = v.reshape(b, kvh, hd)
+        slot = pos % kv_cache["k"].shape[1] if win else pos
+        kc = jax.vmap(lambda c, i, val: c.at[i].set(val))(
+            kv_cache["k"], slot, k.astype(jnp.bfloat16))
+        vc = jax.vmap(lambda c, i, val: c.at[i].set(val))(
+            kv_cache["v"], slot, v.astype(jnp.bfloat16))
+        length = jnp.minimum(pos + 1, kc.shape[1])
+        o = attend_cache(q, kc, vc, length, window=None)
+        return (o.reshape(b, h * hd) @ p["wo"],
+                {"k": kc, "v": vc})
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray,
+                                                          PyTree]:
+        """tokens: [B] int32 (or [B, D] embeds for stub frontends).
+        Returns (logits [B, V], new cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        if tokens.ndim == 2:
+            x = tokens.astype(params["embed"].dtype)
+        else:
+            x = params["embed"][tokens]
+        x = shard(x, self.plan, "x", ("batch", "d_model"))
+        new_cache = dict(cache)
+
+        if cfg.family == "hybrid" and cfg.attn_every:
+            period = cfg.attn_every
+            n_shared = cfg.n_layers // cfg.attn_every
+            mamba_groups = jax.tree_util.tree_map(
+                lambda a: a.reshape((n_shared, period) + a.shape[1:]),
+                params["mamba"])
+            mstate = jax.tree_util.tree_map(
+                lambda a: a.reshape((n_shared, period) + a.shape[1:]),
+                cache["mamba"])
+
+            def outer(x, inp):
+                pgrp, sgrp, kvi = inp
+
+                def inner(xc, pin):
+                    p, st = pin
+                    y, st2 = mamba_step(p, rms_norm(xc, p["ln"],
+                                                    cfg.norm_eps),
+                                        st, cfg, self.plan)
+                    return xc + y, st2
+
+                x, st_new = jax.lax.scan(inner, x, (pgrp, sgrp))
+                ps = params["shared"]
+                h, kv_new = self._attn_decode(
+                    ps["attn"], rms_norm(x, ps["ln1"], cfg.norm_eps),
+                    kvi, pos, cfg, win=True)
+                x = x + h
+                x = x + _mlp_forward(ps["mlp"],
+                                     rms_norm(x, ps["ln2"], cfg.norm_eps))
+                return x, (st_new, kv_new)
+
+            x, (mstate_new, kv_new) = self._fold(
+                outer, x, (mamba_groups, mstate, cache["shared"]))
+            new_cache["mamba"] = jax.tree_util.tree_map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]),
+                mstate_new)
+            new_cache["shared"] = kv_new
+        elif cfg.xlstm is not None:
+            def pair(x, inp):
+                ps_s, ps_m, st_s, st_m = inp
+                y, st_s2 = slstm_step(ps_s, rms_norm(x, ps_s["ln"],
+                                                     cfg.norm_eps),
+                                      st_s, cfg)
+                x = x + y
+                y, st_m2 = mlstm_step(ps_m, rms_norm(x, ps_m["ln"],
+                                                     cfg.norm_eps),
+                                      st_m, cfg)
+                return x + y, (st_s2, st_m2)
+
+            x, (st_s, st_m) = self._fold(
+                pair, x, (params["slstm"], params["mlstm"],
+                          cache["slstm"], cache["mlstm"]))
+            new_cache["slstm"], new_cache["mlstm"] = st_s, st_m
+        elif cfg.family == "ssm":
+            def body(x, inp):
+                p, st = inp
+                y, st2 = mamba_step(p, rms_norm(x, p["ln"], cfg.norm_eps),
+                                    st, cfg, self.plan)
+                return x + y, st2
+
+            x, st_new = self._fold(body, x,
+                                   (params["mamba"], cache["mamba"]))
+            new_cache["mamba"] = st_new
+        else:
+            def body(x, inp):
+                p, kvi = inp
+                h, kv_new = self._attn_decode(
+                    p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                    kvi, pos, cfg, win=cfg.swa_window is not None)
+                x = x + h
+                xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+                if cfg.moe is not None:
+                    y, _ = moe_ffn(p["moe"], xn[:, None, :], cfg, self.plan)
+                    y = y[:, 0]
+                else:
+                    y = _mlp_forward(p["mlp"], xn)
+                return x + y, kv_new
+
+            x, kv_new = self._fold(body, x,
+                                   (params["layers"], cache["kv"]))
+            new_cache["kv"] = kv_new
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        new_cache["pos"] = pos + 1
+        return self._head(params, x), new_cache

@@ -1,0 +1,109 @@
+"""Param-path -> (role, physical dim names) rules: how the solver's
+role-level tilings land on the actual parameter pytree.
+
+Stacked layer params carry a leading [L] axis (never sharded — layers are
+replicated structure, sharding them is pipeline parallelism which is a
+separate explicit axis)."""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (path regex, role, physical dims of the *unstacked* param)
+RULES = [
+    (r"(^|/)embed$", "embed", ("vocab", "d_model")),
+    (r"(^|/)lm_head$", "lm_head", ("d_model", "vocab")),
+    (r"attn/wq$", "wq", ("d_model", "heads")),
+    (r"attn/wk$", "wk", ("d_model", "kv_heads")),
+    (r"attn/wv$", "wv", ("d_model", "kv_heads")),
+    (r"attn/wo$", "wo", ("heads", "d_model")),
+    (r"attn/bq$", "wq", ("heads",)),
+    (r"attn/b[kv]$", "wk", ("kv_heads",)),
+    (r"mlp/wg$", "w_gate", ("d_model", "d_ff")),
+    (r"mlp/wu$", "w_up", ("d_model", "d_ff")),
+    (r"mlp/wd$", "w_down", ("d_ff", "d_model")),
+    (r"moe/router$", "moe_gate", ("d_model", "expert")),
+    (r"moe/w_gate$", "moe_up", ("expert", "d_model", "e_ff")),
+    (r"moe/w_up$", "moe_up", ("expert", "d_model", "e_ff")),
+    (r"moe/w_down$", "moe_down", ("expert", "e_ff", "d_model")),
+    (r"w_in$", "ssm_in", ("d_model", "inner")),
+    (r"w_bcdt$", "norm", ()),
+    (r"(^|/)w_out$", "ssm_out", ("inner", "d_model")),
+    (r"conv_w$", "ssm_conv", ("conv", "inner")),
+    (r"slstm/\d*/?w_gates$|w_gates$", "ssm_in", ("d_model", "inner")),
+    (r"w_up$", "w_up", ("d_model", "d_ff")),
+    (r"w_down$", "w_down", ("d_ff", "d_model")),
+    (r"norm$|ln\w*$|ln$|A_log$|(^|/)D$|dt_bias$|r_gates$", "norm", ()),
+]
+
+# cache / batch tensors
+CACHE_RULES = [
+    (r"kv?/k$|shared/k$|(^|/)k$", "kv_cache",
+     ("layer", "batch", "seq_kv", "kv_heads", "hd")),
+    (r"kv?/v$|shared/v$|(^|/)v$", "kv_cache",
+     ("layer", "batch", "seq_kv", "kv_heads", "hd")),
+    (r"ssm$", "ssm_state", ("layer", "batch", "inner", "hd", "sdim")),
+    (r"conv$", "ssm_state", ("layer", "batch", "conv", "inner")),
+    (r"(^|/)C$", "ssm_state", ("layer", "batch", "inner", "hd", "hd2")),
+    (r"(^|/)[hcn]$", "ssm_state", ("layer", "batch", "inner", "hd")),
+    (r"pos$", "norm", ()),
+]
+
+
+def _match(path: str, rules) -> Optional[Tuple[str, Tuple[str, ...]]]:
+    for rx, role, dims in rules:
+        if re.search(rx, path):
+            return role, dims
+    return None
+
+
+def leaf_pspec(plan, path: str, ndim: int, rules=RULES) -> P:
+    """PartitionSpec for one param leaf (handles the stacked [L] axis)."""
+    m = _match(path, rules)
+    if m is None or plan is None:
+        return P()
+    role, dims = m
+    extra = ndim - len(dims)
+    if extra > 0:
+        dims = ("layer",) * extra + tuple(dims)
+    elif extra < 0:
+        dims = tuple(dims)[-ndim:] if ndim else ()
+    return plan.pspec(role, dims, default=P())
+
+
+def tree_pspecs(plan, tree: PyTree, rules=RULES) -> PyTree:
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        nd = getattr(leaf, "ndim", np.ndim(leaf))
+        out.append(leaf_pspec(plan, key, nd, rules))
+    return jax.tree_util.tree_unflatten(flat[1], out)
+
+
+def tree_shardings(plan, tree: PyTree, mesh: Mesh, rules=RULES) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree_pspecs(plan, tree, rules),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(plan, kind: str = "train"):
+    """Shardings for the input batch."""
+    if plan is None:
+        return {"tokens": P(), "labels": P()}
+    tok = plan.pspec("x", ("batch", "seq", "d_model"))
+    bspec = P(tok[0] if len(tok) else None,
+              tok[1] if len(tok) > 1 else None)
+    if kind == "train":
+        return {"tokens": bspec, "labels": bspec}
+    if kind == "decode":           # rank-1 [B] token vector
+        return P(tok[0] if len(tok) else None)
+    return bspec

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, apply_updates, init_state, schedule, global_norm
+from .compression import compress_grads, decompress_grads, init_error

@@ -1,0 +1,59 @@
+"""Error-feedback int8 gradient compression (1000-node-scale trick).
+
+Gradients are quantized to int8 with a per-tensor fp32 scale before the
+data-parallel all-reduce; the quantization residual is fed back into the
+next step's gradient (error feedback keeps SGD convergence — Karimireddy
+et al. 2019).  Under GSPMD the all-reduce then moves 4x fewer bytes: the
+quantize happens *before* the psum in the train step, so XLA's collective
+carries int8.  This composes with the solver plan: it shrinks the
+`red -> r` conversion the tiling cost model prices for DP axes."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def init_error(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """fp -> (int8 values, fp32 scale). Symmetric per-tensor scaling."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: PyTree, errors: PyTree) -> Tuple[PyTree, PyTree]:
+    """Apply error feedback + quantize.  Returns (compressed {q, scale}
+    tree, new error tree).  The caller all-reduces the compressed values
+    (or lets GSPMD do it) and dequantizes after."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s)
+        return (q, s), corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = treedef.unflatten([p[0] for p in pairs])
+    new_err = treedef.unflatten([p[1] for p in pairs])
+    return comp, new_err
+
+
+def decompress_grads(comp: PyTree) -> PyTree:
+    def is_pair(x):
+        return isinstance(x, tuple) and len(x) == 2
+    return jax.tree_util.tree_map(
+        lambda qs: dequantize(*qs), comp, is_leaf=is_pair)

@@ -1,0 +1,2 @@
+from .train_loop import TrainConfig, make_train_step, train
+from .serve import ServeConfig, Server

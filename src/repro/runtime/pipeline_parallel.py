@@ -1,0 +1,98 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis using
+shard_map + lax.ppermute (the jax-native rendering of the paper-era
+send/recv pipeline; differentiable, so training works through it).
+
+The layer stack [L, ...] is split into S contiguous stages; microbatches
+flow through the ring with a (n_micro + S - 1)-step schedule.  This is an
+*optional* axis on top of the solver's data/model tiling (the paper's
+tiling space does not contain pipelining — see DESIGN.md §5)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+
+def pipeline_forward(mesh: Mesh, stage_axis: str,
+                     stage_fn: Callable[[PyTree, jnp.ndarray], jnp.ndarray],
+                     params_staged: PyTree, x: jnp.ndarray,
+                     n_micro: int) -> jnp.ndarray:
+    """Run ``stage_fn`` S times (once per stage) over microbatched ``x``.
+
+    params_staged: leaves with leading [S] axis (one slice per stage).
+    x: [B, ...] global batch; B % n_micro == 0.
+    Returns stage-(S-1) outputs re-assembled to [B, ...].
+    """
+    s = mesh.shape[stage_axis]
+    b = x.shape[0]
+    assert b % n_micro == 0
+    mb = b // n_micro
+    xm = x.reshape(n_micro, mb, *x.shape[1:])
+
+    def body(params_local, xm_local):
+        # params_local: this stage's params (leading axis stripped)
+        params_local = jax.tree_util.tree_map(
+            lambda a: a[0], params_local)
+        idx = jax.lax.axis_index(stage_axis)
+        n_steps = n_micro + s - 1
+        buf = jnp.zeros_like(xm_local[0])
+        outs = jnp.zeros_like(xm_local)
+
+        def step(carry, t):
+            buf, outs = carry
+            feed = jnp.where(t < n_micro,
+                             xm_local[jnp.minimum(t, n_micro - 1)], 0.0)
+            inp = jnp.where(idx == 0, feed, buf)
+            out = stage_fn(params_local, inp)
+            # last stage finishes microbatch t - (s-1) at step t
+            mi = t - (s - 1)
+            valid = (idx == s - 1) & (mi >= 0)
+            outs = jax.lax.cond(
+                valid,
+                lambda o: o.at[jnp.maximum(mi, 0)].set(out),
+                lambda o: o, outs)
+            nxt = jax.lax.ppermute(
+                out, stage_axis,
+                [(i, (i + 1) % s) for i in range(s)])
+            return (buf * 0 + nxt, outs), None
+
+        (buf, outs), _ = jax.lax.scan(step, (buf, outs),
+                                      jnp.arange(n_steps))
+        # broadcast final outputs from last stage to all (psum of masked)
+        outs = jnp.where(idx == s - 1, outs, 0.0)
+        outs = jax.lax.psum(outs, stage_axis)
+        return outs
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(stage_axis), P()),
+        out_specs=P(),
+        check_rep=False)
+    outs = fn(params_staged, xm)
+    return outs.reshape(b, *x.shape[1:])
+
+
+def split_stages(params_stacked: PyTree, n_stages: int) -> PyTree:
+    """[L, ...] layer stack -> [S, L/S, ...] staged stack."""
+    def r(a):
+        l = a.shape[0]
+        assert l % n_stages == 0
+        return a.reshape(n_stages, l // n_stages, *a.shape[1:])
+    return jax.tree_util.tree_map(r, params_stacked)
+
+
+def make_stage_fn(layer_fn: Callable[[PyTree, jnp.ndarray], jnp.ndarray]
+                  ) -> Callable[[PyTree, jnp.ndarray], jnp.ndarray]:
+    """Stage = scan of L/S layers."""
+    def stage(params_stage, x):
+        def body(x, p):
+            return layer_fn(p, x), None
+        x, _ = jax.lax.scan(body, x, params_stage)
+        return x
+    return stage

@@ -1,0 +1,128 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles, in interpret mode (CPU container; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import (flash_attention_bwd,
+                                           flash_attention_fwd)
+from repro.kernels.ssd import ssd_chunk_scan
+from repro.models.attention import flash_attention_xla
+
+
+def _qkv(key, b, sq, sk, h, kv, hd, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, h, hd), dtype)
+    k = jax.random.normal(k2, (b, sk, kv, hd), dtype)
+    v = jax.random.normal(k3, (b, sk, kv, hd), dtype)
+    return q, k, v
+
+
+SWEEP = [
+    # b, sq, sk, h, kv, hd, causal, window, dtype, tol
+    (1, 128, 128, 4, 4, 64, True, None, jnp.float32, 2e-5),
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32, 2e-5),   # GQA
+    (1, 256, 256, 2, 1, 128, True, None, jnp.float32, 2e-5),  # MQA
+    (1, 128, 128, 2, 2, 64, False, None, jnp.float32, 2e-5),
+    (1, 256, 256, 2, 2, 64, True, 64, jnp.float32, 2e-5),     # SWA
+    (1, 128, 128, 4, 4, 64, True, None, jnp.bfloat16, 3e-2),
+    (1, 96, 96, 2, 2, 32, True, None, jnp.float32, 2e-5),     # ragged blocks
+]
+
+
+class TestFlashAttentionFwd:
+    @pytest.mark.parametrize(
+        "b,sq,sk,h,kv,hd,causal,window,dtype,tol", SWEEP)
+    def test_matches_oracle(self, b, sq, sk, h, kv, hd, causal, window,
+                            dtype, tol):
+        q, k, v = _qkv(jax.random.PRNGKey(0), b, sq, sk, h, kv, hd, dtype)
+        o_ref = ref.attention_ref(q, k, v, causal=causal, window=window)
+        o, lse = flash_attention_fwd(q, k, v, causal=causal,
+                                     window=window, interpret=True,
+                                     block_q=64, block_k=64)
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(o_ref, np.float32),
+            atol=tol, rtol=tol)
+
+    def test_lse_correct(self):
+        q, k, v = _qkv(jax.random.PRNGKey(1), 1, 64, 64, 2, 2, 32,
+                       jnp.float32)
+        _, lse = flash_attention_fwd(q, k, v, causal=True, interpret=True,
+                                     block_q=32, block_k=32)
+        # reference lse
+        scale = 32 ** -0.5
+        s = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k)
+        mask = jnp.tril(jnp.ones((64, 64), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+        lse_ref = jax.nn.logsumexp(s, -1)
+        np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestFlashAttentionBwd:
+    @pytest.mark.parametrize(
+        "b,sq,sk,h,kv,hd,causal,window,dtype,tol",
+        [s for s in SWEEP if s[8] == jnp.float32][:5])
+    def test_grads_match_oracle(self, b, sq, sk, h, kv, hd, causal,
+                                window, dtype, tol):
+        q, k, v = _qkv(jax.random.PRNGKey(2), b, sq, sk, h, kv, hd, dtype)
+
+        def f_pl(q, k, v):
+            return jnp.sum(ops.flash_attention(q, k, v, causal, window)
+                           * 0.01)
+
+        def f_ref(q, k, v):
+            return jnp.sum(ref.attention_ref(q, k, v, causal=causal,
+                                             window=window) * 0.01)
+
+        g_pl = jax.grad(f_pl, argnums=(0, 1, 2))(q, k, v)
+        g_rf = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b_, name in zip(g_pl, g_rf, "qkv"):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b_, np.float32),
+                atol=5e-4, rtol=5e-4, err_msg=f"d{name}")
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize("b,s,h,p,n,chunk", [
+        (1, 64, 2, 8, 16, 16),
+        (2, 128, 3, 8, 16, 32),
+        (1, 128, 1, 16, 8, 64),
+        (2, 64, 4, 4, 4, 64),     # chunk == seq
+    ])
+    def test_matches_sequential_oracle(self, b, s, h, p, n, chunk):
+        key = jax.random.PRNGKey(3)
+        ks = jax.random.split(key, 4)
+        xh = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+        al = -jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        bb = jax.random.normal(ks[2], (b, s, n)) * 0.3
+        cc = jax.random.normal(ks[3], (b, s, n)) * 0.3
+        y_ref, _ = ref.ssd_ref(xh, al, bb, cc)
+        y = ssd_chunk_scan(xh, al, bb, cc, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestXlaPathMatchesOracle:
+    """The XLA chunked-attention path (used by the dry-run) must agree
+    with the same oracle as the Pallas kernel."""
+
+    @pytest.mark.parametrize("k_chunk", [32, 64, 1024])
+    def test_chunk_invariance(self, k_chunk):
+        q, k, v = _qkv(jax.random.PRNGKey(4), 2, 96, 96, 4, 2, 32,
+                       jnp.float32)
+        o_ref = ref.attention_ref(q, k, v, causal=True)
+        o = flash_attention_xla(q, k, v, causal=True, k_chunk=k_chunk)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_window(self):
+        q, k, v = _qkv(jax.random.PRNGKey(5), 1, 128, 128, 2, 2, 32,
+                       jnp.float32)
+        o_ref = ref.attention_ref(q, k, v, causal=True, window=32)
+        o = flash_attention_xla(q, k, v, causal=True, window=32,
+                                k_chunk=64)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)

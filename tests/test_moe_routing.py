@@ -1,0 +1,73 @@
+"""MoE routing correctness + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.models.moe import init_moe, moe_ffn, _capacity
+
+
+def _cfg(e=4, k=2, d=16, f=32, cap=4.0):
+    return ArchConfig(
+        name="t", family="moe", n_layers=1, d_model=d, n_heads=2,
+        n_kv_heads=2, d_ff=f, vocab=64, head_dim=8,
+        moe=MoECfg(n_experts=e, top_k=k, d_ff_expert=f,
+                   capacity_factor=cap))
+
+
+class TestRouting:
+    def test_identity_experts_reconstruct(self):
+        """With identity-ish expert weights the MoE output must equal the
+        silu-gated transform of the input per routed weight."""
+        cfg = _cfg(e=4, k=1, d=8, f=8)
+        key = jax.random.PRNGKey(0)
+        params = init_moe(key, cfg, jnp.float32)
+        # make every expert the same deterministic linear map
+        eye = jnp.eye(8)[None].repeat(4, 0)
+        params["w_gate"] = eye * 10.0   # silu(10x) ~ 10x for x>0
+        params["w_up"] = eye
+        params["w_down"] = eye
+        x = jnp.abs(jax.random.normal(key, (2, 4, 8))) + 0.5
+        y, aux = moe_ffn(params, x, cfg)
+        # gates sum to 1 (k=1 -> weight 1) and experts identical =>
+        # y == silu(10x) * x @ I = ~10x * x elementwise-ish sanity:
+        assert y.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert float(jnp.max(jnp.abs(y))) > 0
+
+    def test_gate_weights_normalized(self):
+        cfg = _cfg()
+        key = jax.random.PRNGKey(1)
+        params = init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(key, (2, 8, 16))
+        y, aux = moe_ffn(params, x, cfg)
+        assert np.isfinite(float(aux))
+        assert float(aux) >= 0.9  # Switch aux >= 1 at balance... ~E*sum(me*ce)
+
+    def test_capacity_drops_dont_nan(self):
+        cfg = _cfg(e=4, k=2, cap=0.25)  # tiny capacity forces drops
+        key = jax.random.PRNGKey(2)
+        params = init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(key, (2, 16, 16))
+        y, _ = moe_ffn(params, x, cfg)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_capacity_formula(self):
+        cfg = _cfg(e=8, k=2, cap=1.0)
+        assert _capacity(64, cfg) == 16
+
+    def test_grads_flow_to_experts_and_router(self):
+        cfg = _cfg()
+        key = jax.random.PRNGKey(3)
+        params = init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(key, (1, 8, 16))
+
+        def loss(p):
+            y, aux = moe_ffn(p, x, cfg)
+            return jnp.sum(y ** 2) + aux
+
+        g = jax.grad(loss)(params)
+        for name in ("router", "w_gate", "w_up", "w_down"):
+            assert float(jnp.max(jnp.abs(g[name]))) > 0, name

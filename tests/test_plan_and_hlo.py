@@ -1,0 +1,113 @@
+"""ShardingPlan -> PartitionSpec mapping, param-tree rules, HLO
+collective parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import hlo
+from repro.configs import SHAPES, get_arch
+from repro.core.builders import build_graph
+from repro.core.plan import ShardingPlan, manual_megatron_plan
+from repro.core.solver import MeshAxis, solve_mesh
+from repro.models.sharding import RULES, leaf_pspec, tree_pspecs
+
+
+class TestPlanMapping:
+    def _plan(self):
+        return ShardingPlan(
+            ("data", "model"),
+            {"wq": {"data": None, "model": "heads"},
+             "x": {"data": "batch", "model": None},
+             "kv_cache": {"data": "batch", "model": "seq_kv"},
+             "logits": {"data": "batch", "model": "vocab"}})
+
+    def test_basic_pspec(self):
+        p = self._plan()
+        assert p.pspec("wq", ("d_model", "heads")) == P(None, "model")
+        assert p.pspec("x", ("batch", "seq", "d_model")) == P("data")
+
+    def test_multi_axis_same_dim(self):
+        p = ShardingPlan(("data", "model"),
+                         {"x": {"data": "batch", "model": "batch"}})
+        assert p.pspec("x", ("batch", "d")) == P(("data", "model"))
+
+    def test_unknown_role_returns_default(self):
+        # None default => shard() no-ops (P() would force replication)
+        assert self._plan().pspec("nope", ("a", "b")) is None
+        assert self._plan().pspec("nope", ("a", "b"), default=P()) == P()
+
+    def test_cache_spec(self):
+        p = self._plan()
+        spec = p.pspec("kv_cache",
+                       ("layer", "batch", "seq_kv", "kv_heads", "hd"))
+        assert spec == P(None, "data", "model")
+
+    def test_leaf_pspec_stacked(self):
+        p = self._plan()
+        # stacked [L, d_model, heads] param: leading axis unsharded
+        spec = leaf_pspec(p, "layers/attn/wq", 3)
+        assert spec == P(None, None, "model")
+
+    def test_tree_pspecs_cover_params(self):
+        cfg = get_arch("llama3.2-3b").reduced()
+        from repro.models.model import LM
+        params = jax.eval_shape(LM(cfg).init, jax.random.PRNGKey(0))
+        specs = tree_pspecs(self._plan(), params)
+        leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert all(isinstance(s, P) for s in leaves)
+
+    def test_solver_plan_roundtrip(self):
+        cfg = get_arch("qwen2-1.5b")
+        g = build_graph(cfg, SHAPES["decode_32k"])
+        sol = solve_mesh(g, [MeshAxis("data", 4), MeshAxis("model", 4)],
+                         beam=2000)
+        plan = ShardingPlan.from_graph_solution(sol, g)
+        assert "kv_cache" in plan.role_cuts
+        assert "x" in plan.role_cuts
+        # the capacity term must prevent a replicated 32k cache
+        assert any(d for d in plan.role_cuts["kv_cache"].values())
+
+    def test_megatron_manual_plan(self):
+        p = manual_megatron_plan(("data", "model"), ("data",), "model")
+        assert p.pspec("wq", ("d_model", "heads")) == P(None, "model")
+        assert p.pspec("x", ("batch", "seq", "d_model")) == P("data")
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[4,1024]{1,0} all-gather(bf16[4,64]{1,0} %x), replica_groups={{0,1,2,3}}, dimensions={1}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), replica_groups=[8,4]<=[32], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(f32[256]{0} %z), replica_groups={{0,1,2,3}}
+  %cp = bf16[128]{0} collective-permute(bf16[128]{0} %w), source_target_pairs={{0,1}}
+  ROOT %t = tuple()
+}
+"""
+
+
+class TestHloParsing:
+    def test_counts_and_bytes(self):
+        st = hlo.collect(HLO_SAMPLE, 32)
+        assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                             "reduce-scatter": 1, "collective-permute": 1}
+        # all-gather result 4*1024*2 bytes, g=4 -> wire = s*(g-1)/g
+        ag = 4 * 1024 * 2
+        ar = 256 * 4
+        rs = 64 * 4
+        cp = 128 * 2
+        expect = (ag * 3 / 4) + (2 * ar * 3 / 4) + (rs * 3) + cp
+        assert st.wire_bytes_per_device == pytest.approx(expect)
+
+    def test_iota_group_size(self):
+        st = hlo.collect(HLO_SAMPLE, 32)
+        # the all-reduce uses iota groups [8,4] => group size 4
+        assert st.counts["all-reduce"] == 1
+
+    def test_shape_bytes_tuple(self):
+        assert hlo.shape_bytes("(bf16[2,2], f32[4])") == 8 + 16
+
+    def test_empty_text(self):
+        st = hlo.collect("ENTRY %m { ROOT %t = tuple() }", 8)
+        assert st.wire_bytes_per_device == 0.0

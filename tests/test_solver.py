@@ -1,0 +1,134 @@
+"""Solver tests: DP optimality vs brute force, the paper's §2.2 numbers,
+hybrid-beats-pure claims, Theorem-2 commutativity."""
+import itertools
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.builders import mlp_graph
+from repro.core.cost import graph_cost
+from repro.core.graph import Graph
+from repro.core.solver import (MeshAxis, assignment_cost_naive,
+                               canonical_mp_assignment, composed_cost,
+                               data_parallel_assignment, solve_mesh,
+                               solve_one_cut, solve_one_cut_bruteforce)
+from repro.core.tiling import Part, REPLICATE
+
+AXES16 = [MeshAxis(f"c{i}", 2) for i in range(4)]
+
+
+def random_chain_graph(rng: random.Random, n_layers: int) -> Graph:
+    """Random einsum chain with a couple of ewise ops."""
+    g = Graph("rand", allow_uneven=True)
+    widths = [rng.choice([8, 16, 32]) for _ in range(n_layers + 1)]
+    batch = rng.choice([8, 16])
+    g.tensor("x0", ("batch", "h0"), (batch, widths[0]), 4.0, kind="input")
+    for l in range(1, n_layers + 1):
+        g.tensor(f"W{l}", (f"h{l-1}", f"h{l}"),
+                 (widths[l - 1], widths[l]), 4.0, kind="weight")
+        g.tensor(f"x{l}", ("batch", f"h{l}"), (batch, widths[l]), 4.0)
+        g.einsum(f"mm{l}", f"x{l-1}", f"W{l}", f"x{l}")
+        if rng.random() < 0.5:
+            g.tensor(f"a{l}", ("batch", f"h{l}"), (batch, widths[l]), 4.0)
+            g.ewise(f"act{l}", (f"x{l}",), f"a{l}")
+    return g
+
+
+class TestOptimality:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_dp_matches_bruteforce(self, seed):
+        rng = random.Random(seed)
+        g = random_chain_graph(rng, rng.randint(1, 3))
+        for arity in (2, 4):
+            exact = solve_one_cut_bruteforce(g, arity, mem_scale=1.0)
+            dp = solve_one_cut(g, arity, mem_scale=1.0)
+            dp_total = graph_cost(g, dp.assignment, arity, mem_scale=1.0)
+            assert dp_total == pytest.approx(exact.cost, rel=1e-9), (
+                f"seed={seed} arity={arity}")
+
+    def test_dp_cost_equals_assignment_cost(self):
+        g = mlp_graph(batch=64, hidden=[32, 32, 32])
+        sol = solve_one_cut(g, 2, mem_scale=1.0)
+        assert sol.cost == pytest.approx(
+            graph_cost(g, sol.assignment, 2, mem_scale=1.0), rel=1e-9)
+
+    def test_fixed_pins_respected(self):
+        g = mlp_graph(batch=64, hidden=[32, 32])
+        fixed = {"W1": Part("h0")}
+        sol = solve_one_cut(g, 2, fixed=fixed)
+        assert sol.assignment["W1"] == Part("h0")
+
+
+class TestPaperSection22:
+    """The paper's §2.2 example: 5-layer MLP, 300 neurons, batch 400,
+    16 GPUs => DP 57.6 MB, MP 76.8 MB, hybrid 33.6 MB."""
+
+    def setup_method(self):
+        self.g = mlp_graph(batch=400, hidden=[300] * 6)
+        self.dp = data_parallel_assignment(self.g)
+        self.mp = canonical_mp_assignment(self.g)
+
+    def test_data_parallel_57_6(self):
+        c = assignment_cost_naive(self.g, AXES16, [self.dp] * 4)
+        assert c / 1e6 == pytest.approx(57.6)
+
+    def test_model_parallel_76_8(self):
+        c = assignment_cost_naive(self.g, AXES16, [self.mp] * 4)
+        assert c / 1e6 == pytest.approx(76.8)
+
+    def test_hybrid_33_6(self):
+        per_axis = [self.dp, self.dp, self.mp, self.mp]
+        c = assignment_cost_naive(self.g, AXES16, per_axis)
+        assert c / 1e6 == pytest.approx(33.6)
+
+    def test_solver_beats_hand_hybrid(self):
+        sol = solve_mesh(self.g, AXES16, mem_scale=0.0)
+        hybrid = composed_cost(self.g, AXES16,
+                               [self.dp, self.dp, self.mp, self.mp])
+        dp = composed_cost(self.g, AXES16, [self.dp] * 4)
+        mp = composed_cost(self.g, AXES16, [self.mp] * 4)
+        assert sol.total_bytes <= hybrid + 1e-6
+        assert sol.total_bytes < min(dp, mp)
+
+    def test_flipped_shapes_favor_mp(self):
+        # §2.2: "if the batch size is 300 while the layer size is 400,
+        # model parallelism becomes better"
+        g2 = mlp_graph(batch=300, hidden=[400] * 6)
+        dp = assignment_cost_naive(
+            g2, AXES16, [data_parallel_assignment(g2)] * 4)
+        mp = assignment_cost_naive(
+            g2, AXES16, [canonical_mp_assignment(g2)] * 4)
+        assert mp < dp
+
+
+class TestCommutativity:
+    """Theorem 2/3: composition of cuts is commutative — reordering the
+    per-axis assignments of a composed tiling does not change its total
+    cost (binary axes)."""
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_reorder_invariance(self, seed):
+        rng = random.Random(100 + seed)
+        g = random_chain_graph(rng, 2)
+        axes = [MeshAxis("a", 2), MeshAxis("b", 2)]
+        a1 = data_parallel_assignment(g)
+        sol = solve_one_cut(g, 2, mem_scale=0.0)
+        a2 = sol.assignment
+        c12 = composed_cost(g, axes, [a1, a2])
+        c21 = composed_cost(g, axes, [a2, a1])
+        assert c12 == pytest.approx(c21, rel=1e-6)
+
+
+class TestMeshSolve:
+    def test_monotone_axes(self):
+        """More devices never decrease the solver's total bytes."""
+        g = mlp_graph(batch=64, hidden=[64, 64, 64])
+        c2 = solve_mesh(g, [MeshAxis("a", 2)]).total_bytes
+        c4 = solve_mesh(g, [MeshAxis("a", 2), MeshAxis("b", 2)]).total_bytes
+        assert c4 >= c2 - 1e-9
+
+    def test_zero_cost_trivial_mesh(self):
+        g = mlp_graph(batch=64, hidden=[64, 64])
+        sol = solve_mesh(g, [MeshAxis("a", 1)])
+        assert sol.total_bytes == 0.0

@@ -1,0 +1,201 @@
+"""Substrate tests: optimizer, compression, data pipeline, checkpointing,
+fault-tolerant training loop (kill + resume bit-exactness)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, host_batch
+from repro.models.model import LM
+from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
+                               init_state, schedule)
+from repro.optim.compression import (compress_grads, decompress_grads,
+                                     init_error, quantize, dequantize)
+from repro.runtime.train_loop import TrainConfig, train
+
+
+class TestAdamW:
+    def test_quadratic_converges(self):
+        params = {"w": jnp.array([5.0, -3.0, 2.0])}
+        state = init_state(params)
+        cfg = AdamWConfig(lr=0.3, weight_decay=0.0, warmup_steps=0,
+                          total_steps=200, clip_norm=None)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = apply_updates(params, grads, state, cfg)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+    def test_clipping(self):
+        params = {"w": jnp.zeros(3)}
+        state = init_state(params)
+        cfg = AdamWConfig(clip_norm=1.0)
+        _, _, gnorm = apply_updates(params, {"w": jnp.ones(3) * 100},
+                                    state, cfg)
+        assert float(gnorm) == pytest.approx(100 * np.sqrt(3), rel=1e-5)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        assert float(schedule(cfg, jnp.array(0))) < 0.2
+        assert float(schedule(cfg, jnp.array(10))) == pytest.approx(1.0, abs=0.1)
+        assert float(schedule(cfg, jnp.array(100))) == pytest.approx(0.1, abs=0.02)
+
+    def test_weight_decay_only_matrices(self):
+        params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        state = init_state(params)
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.5, warmup_steps=0)
+        zero = jax.tree_util.tree_map(jnp.zeros_like, params)
+        p2, _, _ = apply_updates(params, zero, state, cfg)
+        assert float(p2["w"][0, 0]) < 1.0      # decayed
+        assert float(p2["b"][0]) == pytest.approx(1.0)  # not decayed
+
+
+class TestCompression:
+    @given(st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_quantize_bound(self, seed):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
+        q, s = quantize(g)
+        err = jnp.abs(dequantize(q, s) - g)
+        assert float(jnp.max(err)) <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_accumulates(self):
+        grads = {"w": jnp.full((16,), 0.001)}
+        err = init_error(grads)
+        total = jnp.zeros(16)
+        for _ in range(50):
+            comp, err = compress_grads(grads, err)
+            total = total + decompress_grads(comp)["w"]
+        # with error feedback, the long-run average is unbiased
+        assert float(jnp.mean(total)) == pytest.approx(0.05, rel=0.1)
+
+
+class TestDataPipeline:
+    def test_deterministic(self):
+        cfg = DataConfig(seed=7, vocab=100, seq_len=32, global_batch=4)
+        a = host_batch(cfg, 3)
+        b = host_batch(cfg, 3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        cfg = DataConfig(seed=7, vocab=100, seq_len=32, global_batch=4)
+        a = host_batch(cfg, 1)["tokens"]
+        b = host_batch(cfg, 2)["tokens"]
+        assert not np.array_equal(a, b)
+
+    def test_host_sharding_partitions(self):
+        g = DataConfig(seed=1, vocab=50, seq_len=8, global_batch=8,
+                       n_hosts=1, host_id=0)
+        h0 = DataConfig(seed=1, vocab=50, seq_len=8, global_batch=8,
+                        n_hosts=2, host_id=0)
+        h1 = DataConfig(seed=1, vocab=50, seq_len=8, global_batch=8,
+                        n_hosts=2, host_id=1)
+        assert host_batch(h0, 0)["tokens"].shape[0] == 4
+        assert host_batch(h1, 0)["tokens"].shape[0] == 4
+        assert not np.array_equal(host_batch(h0, 0)["tokens"],
+                                  host_batch(h1, 0)["tokens"])
+
+    def test_labels_shifted(self):
+        cfg = DataConfig(seed=3, vocab=1000, seq_len=16, global_batch=2)
+        b = host_batch(cfg, 0)
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+                "step": jnp.array(7, jnp.int32)}
+
+    def test_roundtrip(self, tmp_path):
+        t = self._tree()
+        ckpt.save(str(tmp_path), 5, t, extra={"loss": 1.5})
+        out, extra = ckpt.restore(str(tmp_path), 5, t)
+        assert extra["loss"] == 1.5
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(t["a"]))
+        assert out["nested"]["b"].dtype == jnp.bfloat16
+
+    def test_latest_and_gc(self, tmp_path):
+        t = self._tree()
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(str(tmp_path), s, t)
+        assert ckpt.latest_step(str(tmp_path)) == 5
+        ckpt.gc_old(str(tmp_path), keep=2)
+        assert ckpt.latest_step(str(tmp_path)) == 5
+        assert not os.path.exists(os.path.join(str(tmp_path),
+                                               "step_00000001"))
+
+    def test_tmp_dirs_ignored(self, tmp_path):
+        os.makedirs(os.path.join(str(tmp_path), ".tmp_ckpt_zz"))
+        assert ckpt.latest_step(str(tmp_path)) is None
+
+    def test_elastic_restore_sharding_fn(self, tmp_path):
+        t = self._tree()
+        ckpt.save(str(tmp_path), 1, t)
+        dev = jax.devices()[0]
+        out, _ = ckpt.restore(
+            str(tmp_path), 1, t,
+            sharding_fn=lambda k, a: jax.sharding.SingleDeviceSharding(dev))
+        assert out["a"].sharding == jax.sharding.SingleDeviceSharding(dev)
+
+
+class TestTrainLoop:
+    OPT = AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=1000)
+
+    def _setup(self):
+        cfg = get_arch("qwen2-1.5b").reduced()
+        model = LM(cfg)
+        dcfg = DataConfig(seed=0, vocab=cfg.vocab, seq_len=32,
+                          global_batch=4)
+        return model, dcfg
+
+    def test_loss_decreases(self):
+        model, dcfg = self._setup()
+        tcfg = TrainConfig(steps=25, ckpt_dir=None, optim=self.OPT)
+        out = train(model, dcfg, tcfg)
+        h = out["history"]
+        first = np.mean([r["loss"] for r in h[:5]])
+        last = np.mean([r["loss"] for r in h[-5:]])
+        assert last < first - 0.2, (first, last)
+
+    def test_resume_bit_exact(self, tmp_path):
+        """Fault tolerance: a run killed at step 10 and resumed must
+        reproduce the uninterrupted run's trajectory exactly."""
+        model, dcfg = self._setup()
+        base = TrainConfig(steps=16, ckpt_every=8, optim=self.OPT,
+                           ckpt_dir=str(tmp_path / "a"))
+        full = train(model, dcfg, base)
+
+        # "crash" after 8 steps (first checkpoint), then resume
+        crash = TrainConfig(steps=8, ckpt_every=8, optim=self.OPT,
+                            ckpt_dir=str(tmp_path / "b"))
+        train(model, dcfg, crash)
+        resume = TrainConfig(steps=16, ckpt_every=8, optim=self.OPT,
+                             ckpt_dir=str(tmp_path / "b"))
+        resumed = train(model, dcfg, resume)
+
+        full_tail = [r["loss"] for r in full["history"][8:]]
+        res_tail = [r["loss"] for r in resumed["history"]]
+        np.testing.assert_allclose(res_tail, full_tail, rtol=1e-6)
+
+    def test_grad_compression_trains(self):
+        model, dcfg = self._setup()
+        tcfg = TrainConfig(steps=15, grad_compression=True,
+                           optim=self.OPT)
+        out = train(model, dcfg, tcfg)
+        h = out["history"]
+        assert h[-1]["loss"] < h[0]["loss"]
+
+    def test_straggler_hook_fires(self):
+        model, dcfg = self._setup()
+        hits = []
+        tcfg = TrainConfig(steps=3, straggler_timeout_s=0.0)
+        train(model, dcfg, tcfg,
+              straggler_cb=lambda step, dt: hits.append((step, dt)))
+        assert len(hits) == 3  # 0-second timeout: every step "straggles"

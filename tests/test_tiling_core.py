@@ -1,0 +1,160 @@
+"""Tiling algebra + cost model unit tests (paper §4.1–§4.2)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph
+from repro.core.cost import (graph_cost, memory_penalties, op_cost,
+                             tensor_tiling_choices)
+from repro.core.tiling import (REDUCED, REPLICATE, Part, conversion_cost,
+                               paper_naive_conversion_cost)
+
+
+S = 1000.0  # tensor bytes
+
+
+class TestConversionCosts:
+    """Paper §4.2.1 / Figure 7 costs at A=2, and A-way generalization."""
+
+    def test_identity_free(self):
+        for t in (REPLICATE, Part("a"), REDUCED):
+            assert conversion_cost(t, t, S, 2) == 0.0
+
+    def test_replicate_to_anything_free(self):
+        assert conversion_cost(REPLICATE, Part("a"), S, 2) == 0.0
+
+    def test_reshard_half(self):
+        # paper Fig.7: C -> R moves s/2 total at two devices
+        assert conversion_cost(Part("a"), Part("b"), S, 2) == S / 2
+
+    def test_allgather(self):
+        assert conversion_cost(Part("a"), REPLICATE, S, 2) == S
+
+    def test_reduce_scatter(self):
+        assert conversion_cost(REDUCED, Part("a"), S, 2) == S
+
+    def test_allreduce(self):
+        assert conversion_cost(REDUCED, REPLICATE, S, 2) == 2 * S
+
+    def test_into_reduced_forbidden(self):
+        assert conversion_cost(Part("a"), REDUCED, S, 2) == float("inf")
+        assert conversion_cost(REPLICATE, REDUCED, S, 2) == float("inf")
+
+    @given(st.integers(2, 64))
+    def test_arity_ring_formulas(self, a):
+        assert conversion_cost(Part("x"), REPLICATE, S, a) == \
+            pytest.approx(S * (a - 1))
+        assert conversion_cost(REDUCED, REPLICATE, S, a) == \
+            pytest.approx(2 * S * (a - 1))
+        assert conversion_cost(REDUCED, Part("x"), S, a) == \
+            pytest.approx(S * (a - 1))
+        assert conversion_cost(Part("x"), Part("y"), S, a) == \
+            pytest.approx(S * (a - 1) / a)
+
+    @given(st.integers(2, 64))
+    def test_naive_ps_accounting(self, a):
+        # §2.2 illustration: aggregate+broadcast = 2·s·n, gather = s·n
+        assert paper_naive_conversion_cost(REDUCED, REPLICATE, S, a) == \
+            2 * S * a
+        assert paper_naive_conversion_cost(Part("x"), REPLICATE, S, a) == \
+            S * a
+
+    def test_arity_one_free(self):
+        assert conversion_cost(REDUCED, REPLICATE, S, 1) == 0.0
+
+
+class TestEinsumAlignedForms:
+    def _mm(self):
+        g = Graph("t")
+        g.tensor("X", ("m", "k"), (64, 32), 4.0)
+        g.tensor("Y", ("k", "n"), (32, 16), 4.0)
+        g.tensor("Z", ("m", "n"), (64, 16), 4.0)
+        g.einsum("mm", "X", "Y", "Z")
+        return g
+
+    def test_row_aligned_is_free(self):
+        g = self._mm()
+        a = {"X": Part("m"), "Y": REPLICATE, "Z": Part("m")}
+        assert op_cost(g, g.ops[0], a, 2) == 0.0
+
+    def test_col_aligned_is_free(self):
+        g = self._mm()
+        a = {"X": REPLICATE, "Y": Part("n"), "Z": Part("n")}
+        assert op_cost(g, g.ops[0], a, 2) == 0.0
+
+    def test_contraction_requires_reduction(self):
+        g = self._mm()
+        # C x R -> red -> r : allreduce of Z
+        a = {"X": Part("k"), "Y": Part("k"), "Z": REPLICATE}
+        z = g.tensors["Z"].nbytes
+        assert op_cost(g, g.ops[0], a, 2) == 2 * z
+
+    def test_unaligned_conversion(self):
+        g = self._mm()
+        # paper Fig. 7(b): C x r = R resolves via R x r = R
+        a = {"X": Part("k"), "Y": REPLICATE, "Z": Part("m")}
+        x = g.tensors["X"].nbytes
+        assert op_cost(g, g.ops[0], a, 2) == x / 2
+
+    def test_batch_dim_free(self):
+        g = Graph("b")
+        g.tensor("X", ("b", "m", "k"), (8, 64, 32), 4.0)
+        g.tensor("Y", ("b", "k", "n"), (8, 32, 16), 4.0)
+        g.tensor("Z", ("b", "m", "n"), (8, 64, 16), 4.0)
+        g.einsum("bmm", "X", "Y", "Z")
+        a = {"X": Part("b"), "Y": Part("b"), "Z": Part("b")}
+        assert op_cost(g, g.ops[0], a, 2) == 0.0
+
+    def test_divisibility_gates_forms(self):
+        g = Graph("d")
+        # heads dim has 3 granules of 5 -> cannot cut 2-ways evenly
+        g.tensor("X", ("m", "h"), (4, 15), 4.0, units={"h": 5})
+        g.tensor("Y", ("h", "n"), (15, 8), 4.0, units={"h": 5})
+        g.tensor("Z", ("m", "n"), (4, 8), 4.0)
+        g.einsum("mm", "X", "Y", "Z")
+        choices = tensor_tiling_choices(g, "X", 2)
+        assert Part("h") not in choices
+        assert Part("m") in choices
+
+
+class TestEwise:
+    def test_update_replicated_free(self):
+        g = Graph("u")
+        g.tensor("W", ("a", "b"), (8, 8), 4.0, kind="weight")
+        g.tensor("dW", ("a", "b"), (8, 8), 4.0, kind="grad")
+        g.ewise("upd", ("W", "dW"), "W", update=True)
+        a = {"W": REPLICATE, "dW": REPLICATE}
+        assert op_cost(g, g.ops[0], a, 2) == 0.0
+
+    def test_non_update_replication_penalized(self):
+        g = Graph("e")
+        g.tensor("x", ("a", "b"), (8, 8), 4.0)
+        g.tensor("y", ("a", "b"), (8, 8), 4.0)
+        g.ewise("act", ("x",), "y")
+        a = {"x": REPLICATE, "y": REPLICATE}
+        assert op_cost(g, g.ops[0], a, 2) == g.tensors["y"].nbytes
+
+    def test_align_dims_whitelist(self):
+        g = Graph("w")
+        g.tensor("x", ("a", "b"), (8, 8), 4.0)
+        g.tensor("y", ("a", "b"), (8, 8), 4.0)
+        g.ewise("attn", ("x",), "y", align_dims=("a",))
+        # partitioning along b is not an aligned form: it costs
+        a = {"x": Part("b"), "y": Part("b")}
+        assert op_cost(g, g.ops[0], a, 2) > 0.0
+        a = {"x": Part("a"), "y": Part("a")}
+        assert op_cost(g, g.ops[0], a, 2) == 0.0
+
+
+class TestMemoryPenalty:
+    def test_replicated_cache_penalized(self):
+        g = Graph("m")
+        g.tensor("cache", ("b", "s"), (64, 1 << 20), 2.0,
+                 kind="input", role="kv_cache")
+        g.tensor("w", ("a", "c"), (4, 4), 4.0, kind="weight")
+        pen = memory_penalties(g, 16, scale=1.0)
+        c = g.tensors["cache"]
+        assert pen["cache"][REPLICATE] > pen["cache"][Part("b")] * 15
+        # tiny weight barely penalized
+        assert pen["w"][REPLICATE] < 1.0
