@@ -1,0 +1,224 @@
+"""Solver performance benchmark: optimized vs seed DP across all configs.
+
+For every ``configs/*`` architecture × {single, multi-pod} mesh this
+times ``solve_mesh`` twice on the train_4k semantic graph:
+
+  - *optimized*: memoized cost tables + dominance pruning + adaptive
+    beam (the default path), and
+  - *seed*: the pre-overhaul implementation (``optimize=False``) at the
+    production beam that launch/dryrun.py shipped with (8000).
+
+It also checks the optimized solver against the exhaustive
+``solve_one_cut_bruteforce`` oracle on small graphs (cost must match to
+1e-9 relative) and writes everything to ``BENCH_solver.json``
+(schema in benchmarks/README.md).  Exit status is non-zero unless the
+geomean speedup is >= 2x and every oracle check matches.
+
+  PYTHONPATH=src python benchmarks/solver_bench.py                # full sweep
+  PYTHONPATH=src python benchmarks/solver_bench.py --smoke        # CI subset
+  PYTHONPATH=src python benchmarks/solver_bench.py --resume       # keep done cells
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import ASSIGNED, SHAPES, get_arch
+from repro.core.builders import build_graph, mlp_graph
+from repro.core.cost import graph_cost
+from repro.core.graph import Graph
+from repro.core.solver import (MeshAxis, solve_mesh, solve_one_cut,
+                               solve_one_cut_bruteforce)
+
+SMOKE_ARCHS = ["xlstm-125m", "zamba2-2.7b"]
+SEED_BEAM = 8_000      # launch/dryrun.py production setting (pre-overhaul)
+
+
+def mesh_axes(multi_pod: bool):
+    """Mirrors launch.mesh.solver_axes without importing jax."""
+    ici = 100e9
+    axes = [MeshAxis("data", 16, ici), MeshAxis("model", 16, ici)]
+    if multi_pod:
+        axes = [MeshAxis("pod", 2, 6.25e9)] + axes
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# oracle checks (small graphs, exhaustive reference)
+# ---------------------------------------------------------------------------
+
+def _random_chain_graph(rng: random.Random, n_layers: int) -> Graph:
+    g = Graph("rand", allow_uneven=True)
+    widths = [rng.choice([8, 16, 32]) for _ in range(n_layers + 1)]
+    batch = rng.choice([8, 16])
+    g.tensor("x0", ("batch", "h0"), (batch, widths[0]), 4.0, kind="input")
+    for l in range(1, n_layers + 1):
+        g.tensor(f"W{l}", (f"h{l-1}", f"h{l}"),
+                 (widths[l - 1], widths[l]), 4.0, kind="weight")
+        g.tensor(f"x{l}", ("batch", f"h{l}"), (batch, widths[l]), 4.0)
+        g.einsum(f"mm{l}", f"x{l-1}", f"W{l}", f"x{l}")
+        if rng.random() < 0.5:
+            g.tensor(f"a{l}", ("batch", f"h{l}"), (batch, widths[l]), 4.0)
+            g.ewise(f"act{l}", (f"x{l}",), f"a{l}")
+    return g
+
+
+def oracle_graphs(smoke: bool):
+    if not smoke:   # ~1 min of brute force; too heavy for the CI smoke job
+        yield "mlp_b64_h32x3", mlp_graph(batch=64, hidden=[32, 32, 32])
+    for seed in range(4):
+        rng = random.Random(seed)
+        yield f"chain_seed{seed}", _random_chain_graph(
+            rng, rng.randint(1, 3))
+
+
+def run_oracle(workers: int, smoke: bool = False) -> list:
+    out = []
+    for name, g in oracle_graphs(smoke):
+        for arity in (2, 4):
+            t0 = time.time()
+            ref = solve_one_cut_bruteforce(g, arity, mem_scale=1.0,
+                                           workers=workers)
+            t_ref = time.time() - t0
+            t0 = time.time()
+            opt = solve_one_cut(g, arity, mem_scale=1.0)
+            t_opt = time.time() - t0
+            # re-price the DP assignment independently, same as the tests
+            opt_total = graph_cost(g, opt.assignment, arity, mem_scale=1.0)
+            match = (abs(opt_total - ref.cost)
+                     <= 1e-9 * max(1.0, abs(ref.cost)))
+            out.append({"graph": name, "arity": arity,
+                        "cost_opt": opt_total, "cost_oracle": ref.cost,
+                        "match": bool(match),
+                        "t_opt": t_opt, "t_oracle": t_ref})
+            status = "ok" if match else "MISMATCH"
+            print(f"[oracle {status}] {name} arity={arity} "
+                  f"cost={ref.cost:.6e} opt={t_opt:.3f}s "
+                  f"bruteforce={t_ref:.1f}s", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# config sweep
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, multi_pod: bool, seed_beam: int) -> dict:
+    cfg = get_arch(arch)
+    g = build_graph(cfg, SHAPES["train_4k"])
+    axes = mesh_axes(multi_pod)
+    mesh_name = "pod2" if multi_pod else "pod1"
+
+    t0 = time.time()
+    opt = solve_mesh(g, axes)
+    t_opt = time.time() - t0
+
+    t0 = time.time()
+    seed = solve_mesh(g, axes, optimize=False, beam=seed_beam)
+    t_seed = time.time() - t0
+
+    rec = {
+        "arch": arch, "mesh": mesh_name, "shape": "train_4k",
+        "n_ops": len(g.ops), "n_tensors": len(g.tensors),
+        "t_opt": t_opt, "t_seed": t_seed,
+        "speedup": t_seed / max(t_opt, 1e-9),
+        "cost_opt": opt.total_bytes, "cost_seed": seed.total_bytes,
+        "cost_ratio": opt.total_bytes / max(seed.total_bytes, 1e-9),
+    }
+    print(f"[cell] {arch:24s} {mesh_name} opt={t_opt:6.2f}s "
+          f"seed={t_seed:7.2f}s speedup={rec['speedup']:6.2f}x "
+          f"cost_ratio={rec['cost_ratio']:.6f}", flush=True)
+    return rec
+
+
+def geomean(xs):
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_solver.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 archs, single-pod only (CI)")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="restrict to these archs (repeatable)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--seed-beam", type=int, default=SEED_BEAM)
+    ap.add_argument("--resume", action="store_true",
+                    help="keep already-recorded cells in --out")
+    ap.add_argument("--workers", type=int, default=os.cpu_count(),
+                    help="processes for the brute-force oracle")
+    ap.add_argument("--no-assert", action="store_true",
+                    help="always exit 0 (data-collection runs)")
+    args = ap.parse_args()
+
+    archs = args.arch or (SMOKE_ARCHS if args.smoke else ASSIGNED)
+    from repro.configs.base import all_archs
+    unknown = sorted(set(archs) - set(all_archs()))
+    if unknown:
+        ap.error(f"unknown arch(s) {unknown}; known: {all_archs()}")
+    mesh = "single" if args.smoke and args.mesh == "both" else args.mesh
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[mesh]
+
+    data = {"meta": {}, "oracle": [], "cells": [], "summary": {}}
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            data = json.load(f)
+    data["meta"] = {
+        "seed_beam": args.seed_beam, "opt_beam": "auto",
+        "smoke": bool(args.smoke), "cpus": os.cpu_count(),
+        "shape": "train_4k",
+    }
+
+    def flush():
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=1)
+
+    if not data["oracle"]:
+        data["oracle"] = run_oracle(args.workers, args.smoke)
+        flush()
+
+    done = {(c["arch"], c["mesh"]) for c in data["cells"]}
+    for a in archs:
+        for mp in pods:
+            key = (a, "pod2" if mp else "pod1")
+            if key in done:
+                print(f"[skip done] {key}", flush=True)
+                continue
+            data["cells"].append(run_cell(a, mp, args.seed_beam))
+            flush()
+
+    cells = [c for c in data["cells"]
+             if c["arch"] in archs or not args.arch]
+    gm = geomean([c["speedup"] for c in cells])
+    oracle_ok = all(o["match"] for o in data["oracle"])
+    data["summary"] = {
+        "geomean_speedup": gm,
+        "min_speedup": min((c["speedup"] for c in cells), default=0.0),
+        "max_cost_ratio": max((c["cost_ratio"] for c in cells),
+                              default=0.0),
+        "oracle_all_match": oracle_ok,
+        "n_cells": len(cells),
+    }
+    flush()
+    print(f"\ngeomean speedup {gm:.2f}x over {len(cells)} cells; "
+          f"oracle {'all match' if oracle_ok else 'MISMATCH'}")
+    if not args.no_assert:
+        if not oracle_ok:
+            sys.exit("oracle mismatch")
+        if gm < 2.0:
+            sys.exit(f"geomean speedup {gm:.2f}x < 2x")
+    print("saved", os.path.abspath(args.out))
+
+
+if __name__ == "__main__":
+    main()

@@ -127,10 +127,11 @@ def _aligned_forms(g: Graph, op: OpSpec, arity: int):
         raise ValueError(op.kind)
 
 
-def op_cost(g: Graph, op: OpSpec, assign: Assignment, arity: int,
-            naive: bool = False) -> float:
-    """Eq. (2): min over aligned forms of total conversion cost, times the
-    op's repeat factor."""
+def op_cost_base(g: Graph, op: OpSpec, assign: Assignment, arity: int,
+                 naive: bool = False) -> float:
+    """Eq. (2): min over aligned forms of total conversion cost, *without*
+    the op's repeat factor (so memoized tables can be shared between ops
+    that differ only in repeat)."""
     conv = paper_naive_conversion_cost if naive else conversion_cost
     tensors = g.op_tensors(op)
     best = float("inf")
@@ -149,7 +150,14 @@ def op_cost(g: Graph, op: OpSpec, assign: Assignment, arity: int,
                 break
         if c < best:
             best = c
-    return best * op.repeat
+    return best
+
+
+def op_cost(g: Graph, op: OpSpec, assign: Assignment, arity: int,
+            naive: bool = False) -> float:
+    """Eq. (2): min over aligned forms of total conversion cost, times the
+    op's repeat factor."""
+    return op_cost_base(g, op, assign, arity, naive) * op.repeat
 
 
 def op_cost_table(g: Graph, op: OpSpec, arity: int,
@@ -165,6 +173,106 @@ def op_cost_table(g: Graph, op: OpSpec, arity: int,
         assign = dict(zip(tensors, combo))
         table[combo] = op_cost(g, op, assign, arity, naive)
     return table
+
+
+# ---------------------------------------------------------------------------
+# memoized cost tables (solver perf): ops from repeated layers are costed
+# once per *signature*, not once per op instance — see DESIGN.md.
+# ---------------------------------------------------------------------------
+
+def _canon_tiling(t: Tiling, canon: Dict[str, str]) -> Tiling:
+    if isinstance(t, Part):
+        return Part(canon.get(t.dim, t.dim))
+    return t
+
+
+def op_signature(g: Graph, op: OpSpec, arity: int,
+                 choices: Dict[str, List[Tiling]]) -> tuple:
+    """Hashable key identifying everything the op's cost table depends on:
+    op kind + role structure, per-tensor (dims, shape, bytes, units,
+    uneven flag) and candidate-tiling lists, and the cut arity.  Dimension
+    names are canonicalized in order of first appearance so isomorphic ops
+    from different layers (``wqA`` vs ``wqB``, forward vs a later layer's
+    forward) share one table."""
+    tensors = g.op_tensors(op)
+    index = {t: i for i, t in enumerate(tensors)}
+    canon: Dict[str, str] = {}
+    for t in tensors:
+        for d in g.tensors[t].dims:
+            if d not in canon:
+                canon[d] = f"d{len(canon)}"
+
+    def cd(d):
+        # dims referenced by attrs but absent from every op tensor are
+        # inert for costing; collapse them to one sentinel.
+        return canon.get(d, "~absent")
+
+    tsig = []
+    for t in tensors:
+        ts = g.tensors[t]
+        tsig.append((
+            tuple(cd(d) for d in ts.dims),
+            ts.shape,
+            ts.bytes_per_elem,
+            tuple(sorted((cd(d), u) for d, u in ts.units.items())),
+            ts.allow_uneven,
+            tuple(_canon_tiling(c, canon) for c in choices[t]),
+        ))
+
+    if op.kind == "custom":
+        # form entries for tensors outside the op are never *priced* by
+        # op_cost, but _aligned_forms does feasibility-check them (can the
+        # referenced dim be cut at this arity?) — encode exactly that bit.
+        def entry(t, tl):
+            if t in index:
+                return (index[t], _canon_tiling(tl, canon))
+            feasible = (not isinstance(tl, Part)
+                        or g.tensors[t].can_cut(tl.dim, arity))
+            return (-1, "ext-feasible" if feasible else "ext-infeasible")
+
+        forms = tuple(
+            (tuple(sorted((entry(t, tl) for t, tl in form.items()),
+                          key=lambda kv: (kv[0], str(kv[1])))), pen)
+            for form, pen in op.attrs["forms"])
+        attrs_sig: tuple = ("custom", forms)
+    elif op.kind == "ewise":
+        wl = op.attrs.get("align_dims")
+        attrs_sig = ("ewise",
+                     None if wl is None else tuple(sorted(cd(d) for d in wl)),
+                     bool(op.attrs.get("update")))
+    elif op.kind == "reduce":
+        attrs_sig = ("reduce", cd(op.attrs["axis"]))
+    else:
+        attrs_sig = (op.kind,)
+
+    return (arity, attrs_sig,
+            tuple(index[t] for t in op.inputs), index[op.output],
+            tuple(tsig))
+
+
+def cached_cost_table(g: Graph, op: OpSpec, arity: int,
+                      choices: Dict[str, List[Tiling]],
+                      cache: Dict[tuple, Dict[tuple, float]],
+                      naive: bool = False) -> Dict[tuple, float]:
+    """Base-cost table (no repeat factor) for every combination of the
+    op's tensors' candidate tilings, keyed by per-tensor *choice indices*
+    in g.op_tensors(op) order.  Memoized in ``cache`` across ops, layers
+    and k-cut levels via :func:`op_signature`."""
+    import itertools
+
+    key = (op_signature(g, op, arity, choices), naive)
+    tbl = cache.get(key)
+    if tbl is not None:
+        return tbl
+    tensors = g.op_tensors(op)
+    lists = [choices[t] for t in tensors]
+    tbl = {}
+    for combo in itertools.product(*(range(len(l)) for l in lists)):
+        assign = {t: lists[i][ci]
+                  for i, (t, ci) in enumerate(zip(tensors, combo))}
+        tbl[combo] = op_cost_base(g, op, assign, arity, naive)
+    cache[key] = tbl
+    return tbl
 
 
 def graph_flops(g: Graph) -> float:

@@ -104,6 +104,10 @@ class Graph:
         self.allow_uneven = allow_uneven
         self.tensors: Dict[str, TensorSpec] = {}
         self.ops: List[OpSpec] = []
+        # elimination_order depends only on op/tensor structure, not shapes,
+        # so it is cached and propagated through divided() across the k-cut
+        # recursion; any op-adding method invalidates it.
+        self._elim_order: Optional[List[OpSpec]] = None
 
     # ---- construction ------------------------------------------------
     def tensor(self, name: str, dims: Sequence[str], shape: Sequence[int],
@@ -119,6 +123,7 @@ class Graph:
 
     def einsum(self, name: str, lhs: str, rhs: str, out: str,
                repeat: float = 1.0) -> None:
+        self._elim_order = None
         self.ops.append(OpSpec(name, "einsum", (lhs, rhs), out, repeat))
 
     def ewise(self, name: str, inputs: Sequence[str], out: str,
@@ -133,11 +138,13 @@ class Graph:
             attrs["align_dims"] = tuple(align_dims)
         if update:
             attrs["update"] = True
+        self._elim_order = None
         self.ops.append(OpSpec(name, "ewise", tuple(inputs), out, repeat,
                                attrs))
 
     def reduce(self, name: str, inp: str, out: str, axis: str,
                repeat: float = 1.0) -> None:
+        self._elim_order = None
         self.ops.append(OpSpec(name, "reduce", (inp,), out, repeat,
                                {"axis": axis}))
 
@@ -147,12 +154,20 @@ class Graph:
         """Operator with an explicit aligned-form set (paper §4.5: "the only
         information tied to operator type is its set of aligned tilings").
         ``forms``: list of ({tensor_name: Tiling}, penalty_bytes)."""
+        self._elim_order = None
         self.ops.append(OpSpec(name, "custom", tuple(inputs), out, repeat,
                                {"forms": tuple(forms)}))
 
     # ---- queries -----------------------------------------------------
     def op_tensors(self, op: OpSpec) -> Tuple[str, ...]:
-        return tuple(dict.fromkeys(op.inputs + (op.output,)))
+        # hot path in the solver: memoize on the OpSpec itself (the op
+        # object is shared across divided() copies, where the answer is
+        # identical).
+        t = op.__dict__.get("_tensors")
+        if t is None:
+            t = tuple(dict.fromkeys(op.inputs + (op.output,)))
+            op.__dict__["_tensors"] = t
+        return t
 
     def einsum_dim_classes(self, op: OpSpec):
         """Return (batch, row, col, contract) dim-name tuples for an einsum."""
@@ -172,6 +187,7 @@ class Graph:
 
         g = Graph(self.name, self.allow_uneven)
         g.ops = list(self.ops)
+        g._elim_order = self._elim_order   # structure unchanged
         for name, ts in self.tensors.items():
             t = assignment.get(name)
             g.tensors[name] = (
@@ -222,6 +238,11 @@ class Graph:
         return [levels[d] for d in sorted(levels)]
 
     def elimination_order(self) -> List[OpSpec]:
+        if self._elim_order is None:
+            self._elim_order = self._elimination_order()
+        return self._elim_order
+
+    def _elimination_order(self) -> List[OpSpec]:
         """Op order for the DP: greedy min-liveness elimination.  The DP
         optimum is order-independent (the graph is treated undirected, as
         in the paper's §4.2.2 BFS leveling); only the *width* of the live

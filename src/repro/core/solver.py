@@ -23,31 +23,252 @@ oracle for tests.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+import os
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from .cost import (Assignment, graph_cost, memory_penalties, op_cost,
-                   op_cost_table, tensor_tiling_choices)
+from .cost import (Assignment, cached_cost_table, graph_cost,
+                   memory_penalties, op_cost, op_cost_table,
+                   tensor_tiling_choices)
 from .graph import Graph, OpSpec
 from .tiling import REPLICATE, Tiling
+
+# ``beam="auto"``: start here and widen ×4 until the DP completes without
+# hitting the cap (exact) or the cost stops improving meaningfully
+# (> _AUTO_MIN_IMPROVE relative).  Each round's best cost becomes the
+# dominance bound for the next round, so the wider confirmation runs
+# prune most of their states.  The second rung (8192) matches the
+# pre-overhaul production beam, so plan quality is not sacrificed on
+# graphs where the first rung truncates.
+AUTO_BEAM_START = 2_048
+AUTO_BEAM_MAX = 32_768
+_AUTO_MIN_IMPROVE = 1e-3
+_INCUMBENT_BEAM = 64
+BeamSpec = Union[int, str, None]
 
 
 @dataclasses.dataclass
 class OneCutSolution:
     cost: float
     assignment: Assignment
+    exact: bool = True        # no beam truncation occurred anywhere
 
 
 def solve_one_cut(g: Graph, arity: int,
                   fixed: Optional[Assignment] = None,
-                  beam: Optional[int] = 50_000,
-                  mem_scale: float = 1.0) -> OneCutSolution:
+                  beam: BeamSpec = "auto",
+                  mem_scale: float = 1.0,
+                  optimize: bool = True,
+                  cost_cache: Optional[dict] = None) -> OneCutSolution:
     """Optimal (or beam-pruned) one-cut tiling of graph ``g`` across
     ``arity`` device groups.  Exact variable-elimination DP over the
     layer-group op order; tilings are interned to small ints for speed.
-    ``fixed`` pins tilings of given tensors."""
+    ``fixed`` pins tilings of given tensors.
+
+    ``beam``: int = fixed cap on DP states per step, None = unlimited,
+    "auto" = adaptive widening (exactness detected when no step ever hits
+    the cap).  ``optimize=False`` runs the unmemoized, unpruned seed
+    implementation — kept callable as the baseline for
+    benchmarks/solver_bench.py.  ``cost_cache`` shares memoized per-op
+    cost tables across calls (e.g. across the k-cut recursion)."""
     if arity <= 1:
         return OneCutSolution(0.0, {t: REPLICATE for t in g.tensors})
+    if not optimize:
+        b = 50_000 if isinstance(beam, str) else beam
+        return _solve_one_cut_seed(g, arity, fixed, b, mem_scale)
+    return _solve_one_cut_fast(g, arity, fixed, beam, mem_scale, cost_cache)
+
+
+# ---------------------------------------------------------------------------
+# optimized path: memoized tables + dominance pruning + adaptive beam
+# ---------------------------------------------------------------------------
+
+def _solve_one_cut_fast(g: Graph, arity: int, fixed: Optional[Assignment],
+                        beam: BeamSpec, mem_scale: float,
+                        cost_cache: Optional[dict]) -> OneCutSolution:
+    fixed = fixed or {}
+    order = g.elimination_order()
+    names = list(g.tensors)
+    tid = {t: i for i, t in enumerate(names)}
+    choice_map: Dict[str, List[Tiling]] = {
+        t: ([fixed[t]] if t in fixed else tensor_tiling_choices(g, t, arity))
+        for t in names
+    }
+    choices = [choice_map[t] for t in names]
+    n_choice = [len(c) for c in choices]
+
+    last_use = [-1] * len(names)
+    for i, op in enumerate(order):
+        for t in g.op_tensors(op):
+            last_use[tid[t]] = i
+
+    pen = memory_penalties(g, arity, mem_scale) if mem_scale else {}
+    pen_by_id: Dict[int, List[float]] = {}
+    for t, per in pen.items():
+        j = tid[t]
+        pen_by_id[j] = [per.get(c, 0.0) for c in choices[j]]
+
+    # tie-break: among equal-cost assignments prefer partitioned tensors
+    # (bytes left replicated), so ties feed *smaller* subproblems to the
+    # later cuts of the k-cut recursion — an equal-cost cut that leaves a
+    # huge gradient replicated makes every subsequent cut pay for it.
+    from .tiling import Part
+    tb_by_id = [
+        [0.0 if isinstance(c, Part) else g.tensors[names[j]].nbytes
+         for c in choices[j]]
+        for j in range(len(names))
+    ]
+
+    cache = cost_cache if cost_cache is not None else {}
+    # per-op precomputation, shared by the incumbent pass and every
+    # adaptive-beam widening: (op_ids, base table, repeat, live_after)
+    steps = []
+    live: List[int] = []
+    for i, op in enumerate(order):
+        op_ts = g.op_tensors(op)
+        op_ids = tuple(tid[t] for t in op_ts)
+        tbl = cached_cost_table(g, op, arity, choice_map, cache)
+        live_after = tuple(sorted(set(
+            j for j in set(live) | set(op_ids) if last_use[j] > i)))
+        steps.append((op, op_ids, tbl, op.repeat, live_after))
+        live = list(live_after)
+
+    # incumbent pass: a narrow-beam run gives a feasible upper bound U;
+    # the main run then applies *dominance pruning* — any DP state whose
+    # accumulated cost exceeds U cannot complete below U (all future op
+    # costs and penalties are >= 0), so it is dropped.  Sound, so when no
+    # beam cap is hit the result is exact.
+    inc_cost, inc_node, _ = _run_dp(steps, n_choice, pen_by_id, tb_by_id,
+                                    _INCUMBENT_BEAM, float("inf"), g)
+
+    def _ub(c: float) -> float:
+        return c * (1.0 + 1e-12) + 1e-6
+
+    def _run(b, ub):
+        # ub pruning + beam truncation can, in the worst case, empty the
+        # state set (cheap trap prefixes crowd out the incumbent path and
+        # then all their extensions exceed ub); the incumbent itself is
+        # always a valid answer then — never raise where the seed solver
+        # returned a plan.
+        try:
+            return _run_dp(steps, n_choice, pen_by_id, tb_by_id, b, ub, g)
+        except RuntimeError:
+            return inc_cost, inc_node, True
+
+    ub = _ub(inc_cost)
+    if beam == "auto":
+        b = AUTO_BEAM_START
+        best: Optional[Tuple[float, object]] = None
+        exact = False
+        while True:
+            cost, node, hit = _run(b, ub)
+            improved = best is None or \
+                cost < best[0] - _AUTO_MIN_IMPROVE * abs(best[0])
+            if best is None or cost < best[0]:
+                best = (cost, node)
+                ub = min(ub, _ub(cost))
+            # an un-truncated run is exact (ub pruning is sound), so its
+            # cost is the optimum; it proves the kept solution optimal
+            # whenever the kept cost is not worse.
+            if not hit and best[0] <= cost + 1e-9 * abs(cost):
+                exact = True
+            if not improved or not hit or b >= AUTO_BEAM_MAX:
+                break
+            b *= 4
+        cost, node = best
+    else:
+        cost, node, hit = _run(beam, ub)
+        exact = not hit
+
+    full = dict(fixed)
+    while node is not None:
+        node, pairs = node
+        for j, ci in pairs:
+            full[names[j]] = choices[j][ci]
+    for t in g.tensors:  # untouched tensors -> replicate
+        full.setdefault(t, REPLICATE)
+    return OneCutSolution(cost, full, exact=exact)
+
+
+def _run_dp(steps, n_choice, pen_by_id, tb_by_id, beam: Optional[int],
+            ub: float, g: Graph):
+    """One variable-elimination DP sweep.  States map
+    key = ((tensor_id, choice_idx), ... ascending) -> (cost, tb, node):
+    tb is the tie-break (bytes left replicated; lower preferred at equal
+    cost), node a backpointer chain (parent_node, assigned_pairs).
+    Returns (best_cost, best_node, hit_beam)."""
+    inf = float("inf")
+    state: Dict[tuple, Tuple[float, float, object]] = {(): (0.0, 0.0, None)}
+    hit_beam = False
+    for op, op_ids, tbl, rep, live_after in steps:
+        la_set = set(live_after)
+        # bucket states by their bound choices on this op's tensors: every
+        # state in a bucket shares the same free set and per-combo cost
+        # delta, which is computed once per (bucket, combo).
+        buckets: Dict[tuple, list] = {}
+        for key, (cost0, tb0, node) in state.items():
+            kd = dict(key)
+            bproj = tuple(kd.get(j, -1) for j in op_ids)
+            pers = tuple(p for p in key if p[0] in la_set)
+            buckets.setdefault(bproj, []).append(
+                (cost0, tb0, node, pers))
+
+        new_state: Dict[tuple, Tuple[float, float, object]] = {}
+        for bproj, members in buckets.items():
+            members.sort(key=lambda m: (m[0], m[1]))
+            free = tuple(j for j, b in zip(op_ids, bproj) if b < 0)
+            min_cost0 = members[0][0]
+            for combo in itertools.product(*(range(n_choice[j])
+                                             for j in free)):
+                it = iter(combo)
+                full = tuple(b if b >= 0 else next(it) for b in bproj)
+                d = tbl[full] * rep
+                if d == inf:
+                    continue
+                pairs = tuple(zip(free, combo))
+                dtb = 0.0
+                for j, ci in pairs:
+                    pj = pen_by_id.get(j)
+                    if pj is not None:
+                        d += pj[ci]
+                    dtb += tb_by_id[j][ci]
+                if min_cost0 + d > ub:
+                    continue
+                added = tuple(sorted(p for p in pairs if p[0] in la_set))
+                for cost0, tb0, node, pers in members:
+                    c = cost0 + d
+                    if c > ub:
+                        break  # members sorted ascending by cost
+                    nkey = (tuple(sorted(pers + added))
+                            if added else pers)
+                    cur = new_state.get(nkey)
+                    if cur is None or c < cur[0] or \
+                            (c == cur[0] and tb0 + dtb < cur[1]):
+                        new_state[nkey] = (c, tb0 + dtb, (node, pairs))
+        if not new_state:
+            raise RuntimeError(
+                f"no feasible tiling at op {op.name} of {g.name}")
+        if beam is not None and len(new_state) > beam:
+            hit_beam = True
+            new_state = dict(heapq.nsmallest(
+                beam, new_state.items(), key=lambda kv: (kv[1][0],
+                                                         kv[1][1])))
+        state = new_state
+
+    best_cost, best_tb, best_node = min(
+        state.values(), key=lambda v: (v[0], v[1]))
+    return best_cost, best_node, hit_beam
+
+
+# ---------------------------------------------------------------------------
+# seed path (pre-overhaul reference implementation, benchmarks only)
+# ---------------------------------------------------------------------------
+
+def _solve_one_cut_seed(g: Graph, arity: int,
+                        fixed: Optional[Assignment] = None,
+                        beam: Optional[int] = 50_000,
+                        mem_scale: float = 1.0) -> OneCutSolution:
     fixed = fixed or {}
     order = g.elimination_order()
 
@@ -126,22 +347,57 @@ def solve_one_cut(g: Graph, arity: int,
     return OneCutSolution(best_cost, full)
 
 
-def solve_one_cut_bruteforce(g: Graph, arity: int,
-                             fixed: Optional[Assignment] = None,
-                             mem_scale: float = 1.0) -> OneCutSolution:
-    """Exhaustive reference solver (tests only)."""
-    fixed = fixed or {}
-    names = list(g.tensors)
-    choice_lists = [
-        [fixed[t]] if t in fixed else tensor_tiling_choices(g, t, arity)
-        for t in names
-    ]
+def _bruteforce_chunk(payload) -> Tuple[float, Optional[Assignment]]:
+    """Worker for the parallel oracle: exhaust the sub-product where the
+    pivot tensor is pinned to one choice (top-level for pickling)."""
+    g, arity, names, choice_lists, mem_scale = payload
     best: Tuple[float, Optional[Assignment]] = (float("inf"), None)
     for combo in itertools.product(*choice_lists):
         assign = dict(zip(names, combo))
         c = graph_cost(g, assign, arity, mem_scale=mem_scale)
         if c < best[0]:
             best = (c, assign)
+    return best
+
+
+def solve_one_cut_bruteforce(g: Graph, arity: int,
+                             fixed: Optional[Assignment] = None,
+                             mem_scale: float = 1.0,
+                             workers: Optional[int] = None) -> OneCutSolution:
+    """Exhaustive reference solver (the optimality oracle for tests and
+    benchmarks).  ``workers``: fan the assignment product out over
+    processes with concurrent.futures (0/None on small products = serial);
+    the pivot is the widest-choice tensor."""
+    fixed = fixed or {}
+    names = list(g.tensors)
+    choice_lists = [
+        [fixed[t]] if t in fixed else tensor_tiling_choices(g, t, arity)
+        for t in names
+    ]
+    n_combos = 1
+    for cl in choice_lists:
+        n_combos *= len(cl)
+    if workers is None and n_combos >= 50_000:
+        workers = os.cpu_count() or 1
+    if workers and workers > 1 and n_combos >= 1_000:
+        pivot = max(range(len(names)), key=lambda i: len(choice_lists[i]))
+        jobs = []
+        for c in choice_lists[pivot]:
+            sub = list(choice_lists)
+            sub[pivot] = [c]
+            jobs.append((g, arity, names, sub, mem_scale))
+        try:
+            from concurrent.futures import ProcessPoolExecutor
+            from concurrent.futures.process import BrokenProcessPool
+            with ProcessPoolExecutor(
+                    max_workers=min(workers, len(jobs))) as ex:
+                results = list(ex.map(_bruteforce_chunk, jobs))
+            best = min(results, key=lambda r: r[0])
+            assert best[1] is not None
+            return OneCutSolution(best[0], best[1])
+        except (OSError, BrokenProcessPool):  # no process pool: serial
+            pass
+    best = _bruteforce_chunk((g, arity, names, choice_lists, mem_scale))
     assert best[1] is not None
     return OneCutSolution(best[0], best[1])
 
@@ -180,11 +436,17 @@ class TilingSolution:
 
 def solve_mesh(g: Graph, axes: Sequence[MeshAxis],
                fixed_per_axis: Optional[Dict[str, Assignment]] = None,
-               beam: Optional[int] = 50_000,
-               mem_scale: float = 1.0) -> TilingSolution:
+               beam: BeamSpec = "auto",
+               mem_scale: float = 1.0,
+               optimize: bool = True,
+               cost_cache: Optional[dict] = None) -> TilingSolution:
     """Algorithm 1 generalized to a named mesh: recursively cut along each
-    axis (slowest first), dividing shapes in between."""
+    axis (slowest first), dividing shapes in between.  The memoized
+    ``cost_cache`` is shared across the per-axis cuts (pass one in to
+    share further, e.g. across capacity-escalation rounds)."""
     fixed_per_axis = fixed_per_axis or {}
+    if cost_cache is None and optimize:
+        cost_cache = {}
     cur = g
     groups = 1
     per_axis: List[Assignment] = []
@@ -194,7 +456,8 @@ def solve_mesh(g: Graph, axes: Sequence[MeshAxis],
     for ax in axes:
         sol = solve_one_cut(cur, ax.size,
                             fixed=fixed_per_axis.get(ax.name), beam=beam,
-                            mem_scale=mem_scale)
+                            mem_scale=mem_scale, optimize=optimize,
+                            cost_cache=cost_cache)
         weighted = sol.cost * groups
         per_axis.append(sol.assignment)
         per_bytes.append(weighted)
@@ -204,6 +467,36 @@ def solve_mesh(g: Graph, axes: Sequence[MeshAxis],
         cur = cur.divided(sol.assignment, ax.size)
         groups *= ax.size
     return TilingSolution(list(axes), per_axis, per_bytes, total_b, total_s)
+
+
+def _solve_mesh_job(payload) -> TilingSolution:
+    g, axes, kw = payload
+    return solve_mesh(g, axes, **kw)
+
+
+def solve_mesh_many(jobs: Sequence[Tuple[Graph, Sequence[MeshAxis]]],
+                    workers: Optional[int] = None,
+                    **kw) -> List[TilingSolution]:
+    """Solve several independent (graph, axes) problems concurrently with
+    concurrent.futures — the per-axis cuts *within* one mesh are a chain
+    (each cut divides the graph for the next), so parallelism lives at
+    the level of independent meshes/graphs (e.g. sweeping several archs
+    or meshes at once; parity with sequential solve_mesh is pinned by
+    tests/test_solver.py).  Falls back to serial where process pools are
+    unavailable."""
+    kw.pop("cost_cache", None)   # per-process caches
+    payloads = [(g, axes, kw) for g, axes in jobs]
+    workers = workers if workers is not None else (os.cpu_count() or 1)
+    if workers > 1 and len(jobs) > 1:
+        try:
+            from concurrent.futures import ProcessPoolExecutor
+            from concurrent.futures.process import BrokenProcessPool
+            with ProcessPoolExecutor(
+                    max_workers=min(workers, len(jobs))) as ex:
+                return list(ex.map(_solve_mesh_job, payloads))
+        except (OSError, BrokenProcessPool):
+            pass
+    return [_solve_mesh_job(p) for p in payloads]
 
 
 def persistent_bytes_per_device(g: Graph, axes: Sequence[MeshAxis],
@@ -227,8 +520,9 @@ def persistent_bytes_per_device(g: Graph, axes: Sequence[MeshAxis],
 
 def solve_mesh_capacity(g: Graph, axes: Sequence[MeshAxis],
                         hbm: float = 16e9, budget_frac: float = 0.7,
-                        beam: Optional[int] = 50_000,
-                        max_rounds: int = 5) -> TilingSolution:
+                        beam: BeamSpec = "auto",
+                        max_rounds: int = 5,
+                        workers: Optional[int] = None) -> TilingSolution:
     """Dual ascent on the capacity Lagrangian: solve, check the hard
     per-device persistent-bytes budget, escalate the penalty scale until
     the plan fits (beyond-paper: the paper's objective is communication
@@ -238,17 +532,57 @@ def solve_mesh_capacity(g: Graph, axes: Sequence[MeshAxis],
     pinned to the feasible tilings and the penalty off — a very large λ
     drowns the communication signal and yields feasible-but-awful plans
     (observed on 32B prefill: λ escalation alone gave a zero-collective
-    plan with 10× the memory traffic)."""
+    plan with 10× the memory traffic).
+
+    ``workers`` > 1 evaluates the candidate λ scales concurrently with
+    concurrent.futures and keeps the smallest feasible one — identical
+    result to the sequential escalation, lower wall time when escalation
+    is needed."""
     from .cost import _PERSISTENT_ROLES
-    scale = 1.0
+    scales = [8.0 ** k for k in range(max_rounds)]
+    cost_cache: dict = {}   # λ only rescales penalties; tables are shared
+
+    def feasible(s: TilingSolution) -> bool:
+        return (persistent_bytes_per_device(g, axes, s.per_axis)
+                <= budget_frac * hbm)
+
     sol = None
-    for _ in range(max_rounds):
-        sol = solve_mesh(g, axes, beam=beam, mem_scale=scale)
-        used = persistent_bytes_per_device(g, axes, sol.per_axis)
-        if used <= budget_frac * hbm:
-            break
-        scale *= 8.0
-    if scale == 1.0 or sol is None:
+    raw_ok = False    # feasible at the first scale -> no polish needed
+    parallel_ok = False
+    if workers and workers > 1:
+        # solve each scale as its own job (mem_scale differs per job);
+        # consume results in scale order; once the smallest feasible
+        # scale is known, drop pending jobs without waiting on running
+        # ones (shutdown(wait=False, cancel_futures=True) — their
+        # results are discarded)
+        payloads = [(g, axes, {"beam": beam, "mem_scale": sc})
+                    for sc in scales]
+        try:
+            from concurrent.futures import ProcessPoolExecutor
+            from concurrent.futures.process import BrokenProcessPool
+            ex = ProcessPoolExecutor(
+                max_workers=min(workers, len(scales)))
+            try:
+                futs = [ex.submit(_solve_mesh_job, p) for p in payloads]
+                for i, fut in enumerate(futs):
+                    sol = fut.result()
+                    if feasible(sol):
+                        raw_ok = i == 0
+                        break
+            finally:
+                ex.shutdown(wait=False, cancel_futures=True)
+            parallel_ok = True
+        except (OSError, BrokenProcessPool):   # no process pool: serial
+            sol = None
+            raw_ok = False
+    if not parallel_ok:
+        for i, sc in enumerate(scales):
+            sol = solve_mesh(g, axes, beam=beam, mem_scale=sc,
+                             cost_cache=cost_cache)
+            if feasible(sol):
+                raw_ok = i == 0
+                break
+    if sol is None or raw_ok:
         return sol
     # polish: pin persistent tilings, re-optimize the rest for comm only
     fixed_per_axis: Dict[str, Assignment] = {}
@@ -260,7 +594,7 @@ def solve_mesh_capacity(g: Graph, axes: Sequence[MeshAxis],
                     pins[name] = assign[name]
         fixed_per_axis[ax.name] = pins
     return solve_mesh(g, axes, fixed_per_axis=fixed_per_axis, beam=beam,
-                      mem_scale=0.0)
+                      mem_scale=0.0, cost_cache=cost_cache)
 
 
 def composed_cost(g: Graph, axes: Sequence[MeshAxis],

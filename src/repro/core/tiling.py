@@ -49,6 +49,16 @@ class _Singleton:
     def __copy__(self):
         return self
 
+    def __reduce__(self):
+        # Pickle to the module-level singleton so identity checks
+        # (``t is REPLICATE``) survive a round-trip into worker processes
+        # (the parallel brute-force oracle ships Graphs across processes).
+        return (_lookup_singleton, (self._name,))
+
+
+def _lookup_singleton(name: str) -> "_Singleton":
+    return {"r": REPLICATE, "red": REDUCED}[name]
+
 
 REPLICATE = _Singleton("r")
 REDUCED = _Singleton("red")

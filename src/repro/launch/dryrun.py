@@ -63,9 +63,9 @@ def solve_plan(cfg: ArchConfig, shape: ShapeConfig, multi_pod: bool,
     t0 = time.time()
     if capacity:
         from ..core.solver import solve_mesh_capacity
-        sol = solve_mesh_capacity(g, axes, beam=8000)
+        sol = solve_mesh_capacity(g, axes, beam="auto")
     else:
-        sol = solve_mesh(g, axes, beam=8000)
+        sol = solve_mesh(g, axes, beam="auto")
     plan = ShardingPlan.from_graph_solution(sol, g)
     rec = {
         "mesh_axes": list(plan.mesh_axis_names),

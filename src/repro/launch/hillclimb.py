@@ -74,7 +74,7 @@ def main():
         g = build_graph(cfg, shape)
         t0 = time.time()
         sol = solve_mesh_capacity(g, solver_axes(multi_pod=args.multi_pod),
-                                  beam=8000)
+                                  beam="auto")
         plan = ShardingPlan.from_graph_solution(sol, g)
         print(f"capacity solve {time.time()-t0:.0f}s, persistent/dev = "
               f"{persistent_bytes_per_device(g, solver_axes(multi_pod=args.multi_pod), sol.per_axis)/1e9:.2f} GB")

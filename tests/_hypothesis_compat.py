@@ -1,0 +1,62 @@
+"""Import shim: real hypothesis when installed, else a tiny deterministic
+fallback so tier-1 collection/tests work in minimal containers.
+
+The fallback implements just what this suite uses — ``@given`` with
+``st.integers(lo, hi)`` strategies and a no-op ``@settings`` — running
+each property over a fixed, deterministic sample (bounds, near-bounds,
+and seeded interior points).  Install the real thing with
+``pip install -e .[test]`` to get shrinking and full case generation.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import inspect
+    import itertools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 20
+
+    class _IntStrategy:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def examples(self, n: int = _N_EXAMPLES):
+            lo, hi = self.lo, self.hi
+            vals = {lo, hi, min(hi, lo + 1), max(lo, hi - 1)}
+            rng = random.Random(0xC0FFEE ^ lo ^ (hi << 16))
+            while len(vals) < min(n, hi - lo + 1):
+                vals.add(rng.randint(lo, hi))
+            return sorted(vals)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    st = _Strategies()
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                for vals in itertools.product(
+                        *(s.examples() for s in strats)):
+                    fn(*args, *vals, **kw)
+            # hide the strategy-filled params from pytest's fixture
+            # resolution (it would otherwise look for a fixture per param)
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[:-len(strats)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+        return deco
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco

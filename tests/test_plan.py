@@ -1,0 +1,90 @@
+"""ShardingPlan: solved tilings -> PartitionSpec round-trip
+(ISSUE 1 satellite; see core/plan.py)."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.builders import mlp_graph
+from repro.core.plan import ShardingPlan, manual_megatron_plan
+from repro.core.solver import MeshAxis, TilingSolution, solve_mesh
+from repro.core.tiling import Part, REPLICATE
+
+
+def _sol(axes, per_axis):
+    return TilingSolution(axes, per_axis, [0.0] * len(axes), 0.0, 0.0)
+
+
+class TestFromSolution:
+    AXES = [MeshAxis("a", 2), MeshAxis("b", 2)]
+
+    def test_two_axes_stack_onto_one_physical_dim(self):
+        # both mesh axes partition the same logical dim -> tuple entry
+        sol = _sol(self.AXES, [{"x": Part("batch")}, {"x": Part("batch")}])
+        plan = ShardingPlan.from_solution(sol, {"x": "x"})
+        assert plan.pspec("x", ("batch", "d_model")) == P(("a", "b"))
+
+    def test_distinct_dims_map_to_distinct_entries(self):
+        sol = _sol(self.AXES, [{"x": Part("batch")}, {"x": Part("d_model")}])
+        plan = ShardingPlan.from_solution(sol, {"x": "x"})
+        assert plan.pspec("x", ("batch", "d_model")) == P("a", "b")
+
+    def test_replicated_and_trailing_none_trimmed(self):
+        sol = _sol(self.AXES, [{"x": REPLICATE}, {"x": Part("batch")}])
+        plan = ShardingPlan.from_solution(sol, {"x": "x"})
+        # only axis b cuts; it lands on the first physical dim
+        assert plan.pspec("x", ("batch", "d_model")) == P("b")
+        # dim not present in the physical array -> fully replicated
+        assert plan.pspec("x", ("seq", "d_model")) == P()
+
+    def test_unknown_role_returns_default(self):
+        sol = _sol(self.AXES, [{"x": Part("batch")}, {}])
+        plan = ShardingPlan.from_solution(sol, {"x": "x"})
+        assert plan.pspec("nope", ("batch",)) is None
+        assert plan.pspec("nope", ("batch",), default=P("a")) == P("a")
+
+    def test_cut_lands_on_first_matching_physical_axis(self):
+        sol = _sol([MeshAxis("a", 2)], [{"x": Part("heads")}])
+        plan = ShardingPlan.from_solution(sol, {"x": "qkv"})
+        # merged heads dim appears once; later dims untouched
+        assert plan.pspec("qkv", ("batch", "heads", "head_dim")) == \
+            P(None, "a")
+
+
+class TestFromGraphSolution:
+    def test_round_trip_matches_solver_assignment(self):
+        g = mlp_graph(batch=64, hidden=[32, 32, 32])
+        axes = [MeshAxis("a", 2), MeshAxis("b", 2)]
+        sol = solve_mesh(g, axes, mem_scale=0.0)
+        plan = ShardingPlan.from_graph_solution(sol, g)
+
+        roles = {}
+        for name, ts in g.tensors.items():
+            if ts.role and ts.role not in roles.values():
+                roles.setdefault(name, ts.role)
+        assert roles, "mlp graph must expose roles"
+        for tname, role in roles.items():
+            cuts = plan.role_cuts[role]
+            for ax, assign in zip(sol.axes, sol.per_axis):
+                t = assign.get(tname, REPLICATE)
+                want = t.dim if isinstance(t, Part) else None
+                assert cuts[ax.name] == want, (role, ax.name)
+
+    def test_pspec_consistent_with_role_cuts(self):
+        g = mlp_graph(batch=64, hidden=[32, 32])
+        axes = [MeshAxis("a", 2), MeshAxis("b", 2)]
+        sol = solve_mesh(g, axes, mem_scale=0.0)
+        plan = ShardingPlan.from_graph_solution(sol, g)
+        for role, cuts in plan.role_cuts.items():
+            phys = ("batch", "h0", "h1", "h2")
+            spec = plan.pspec(role, phys)
+            flat = []
+            for e in tuple(spec):
+                flat.extend(e if isinstance(e, tuple) else [e])
+            for ax_name, d in cuts.items():
+                assert (ax_name in flat) == (d is not None and d in phys)
+
+    def test_with_override_replaces_role(self):
+        plan = manual_megatron_plan(("data", "model"), ("data",), "model")
+        plan2 = plan.with_override("wq", {"data": None, "model": None})
+        assert plan2.pspec("wq", ("d_model", "heads")) == P()
+        # original untouched
+        assert plan.pspec("wq", ("d_model", "heads")) == P(None, "model")

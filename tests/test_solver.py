@@ -4,12 +4,13 @@ import itertools
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.builders import mlp_graph
 from repro.core.cost import graph_cost
 from repro.core.graph import Graph
 from repro.core.solver import (MeshAxis, assignment_cost_naive,
+                               solve_mesh_many,
                                canonical_mp_assignment, composed_cost,
                                data_parallel_assignment, solve_mesh,
                                solve_one_cut, solve_one_cut_bruteforce)
@@ -118,6 +119,63 @@ class TestCommutativity:
         c12 = composed_cost(g, axes, [a1, a2])
         c21 = composed_cost(g, axes, [a2, a1])
         assert c12 == pytest.approx(c21, rel=1e-6)
+
+
+class TestCostTableMemoization:
+    def test_out_of_op_form_tensors_keep_distinct_signatures(self):
+        """Custom forms may reference tensors outside the op; they are
+        feasibility-checked (not priced), so two ops differing only in
+        such a tensor's cuttability must not share one cached table."""
+        from repro.core.cost import (cached_cost_table, op_cost,
+                                     tensor_tiling_choices)
+        g = Graph("t")
+        g.tensor("h1", ("p",), (8,), 4.0)   # cuttable at arity 2
+        g.tensor("h2", ("p",), (7,), 4.0)   # not cuttable
+        for i, h in ((1, "h1"), (2, "h2")):
+            g.tensor(f"x{i}", ("p",), (8,), 4.0)
+            g.tensor(f"y{i}", ("p",), (8,), 4.0)
+            g.custom(f"c{i}", (f"x{i}",), f"y{i}",
+                     [({f"x{i}": Part("p"), f"y{i}": Part("p"),
+                        h: Part("p")}, 0.0)])
+        cache = {}
+        choices = {t: tensor_tiling_choices(g, t, 2) for t in g.tensors}
+        for op in g.ops:
+            tbl = cached_cost_table(g, op, 2, choices, cache)
+            tensors = g.op_tensors(op)
+            for combo, base in tbl.items():
+                assign = {t: choices[t][ci]
+                          for t, ci in zip(tensors, combo)}
+                assert base * op.repeat == pytest.approx(
+                    op_cost(g, op, assign, 2)), (op.name, combo)
+        assert len(cache) == 2
+
+
+class TestParallelHelpers:
+    """concurrent.futures fan-out must agree with the sequential paths."""
+
+    def test_solve_mesh_many_matches_sequential(self):
+        g = mlp_graph(batch=64, hidden=[32, 32, 32])
+        jobs = [(g, [MeshAxis("a", 2), MeshAxis("b", 2)]),
+                (g, [MeshAxis("a", 4)])]
+        par = solve_mesh_many(jobs, workers=2, mem_scale=0.0)
+        seq = [solve_mesh(gg, ax, mem_scale=0.0) for gg, ax in jobs]
+        for p, s in zip(par, seq):
+            assert p.total_bytes == pytest.approx(s.total_bytes)
+            assert p.per_axis == s.per_axis
+
+    def test_bruteforce_workers_match_serial(self):
+        g = random_chain_graph(random.Random(7), 2)
+        ser = solve_one_cut_bruteforce(g, 2, mem_scale=1.0, workers=0)
+        par = solve_one_cut_bruteforce(g, 2, mem_scale=1.0, workers=2)
+        assert par.cost == pytest.approx(ser.cost)
+
+    def test_capacity_workers_match_sequential(self):
+        from repro.core.solver import solve_mesh_capacity
+        g = mlp_graph(batch=64, hidden=[64, 64, 64])
+        axes = [MeshAxis("a", 2), MeshAxis("b", 2)]
+        seq = solve_mesh_capacity(g, axes, beam=500)
+        par = solve_mesh_capacity(g, axes, beam=500, workers=2)
+        assert par.total_bytes == pytest.approx(seq.total_bytes)
 
 
 class TestMeshSolve:

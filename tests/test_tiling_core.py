@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import Graph
 from repro.core.cost import (graph_cost, memory_penalties, op_cost,
