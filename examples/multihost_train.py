@@ -13,6 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import dataclasses
 import jax
 
+from repro.compat import make_compat_mesh, use_mesh
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.core.builders import transformer_graph
@@ -39,14 +40,13 @@ plan = ShardingPlan.from_graph_solution(sol, g)
 print("plan:", {r: c for r, c in sorted(plan.role_cuts.items())
                 if any(c.values())})
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_compat_mesh((4, 2), ("data", "model"))
 model = LM(cfg, plan=plan)
 dcfg = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=16)
 tcfg = TrainConfig(steps=args.steps, ckpt_every=50,
                    ckpt_dir=args.ckpt_dir,
                    optim=AdamWConfig(lr=1e-3, total_steps=args.steps))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     out = train(model, dcfg, tcfg)
 h = out["history"]
 print(f"params ~{sum(x.size for x in jax.tree_util.tree_leaves(out['params']))/1e6:.0f}M")

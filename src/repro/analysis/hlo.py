@@ -2,14 +2,27 @@
 
 cost_analysis() has no collective numbers, so we parse the partitioned
 module: every all-gather / all-reduce / reduce-scatter / all-to-all /
-collective-permute op, its per-device operand/result bytes and replica
-group size, then apply ring-collective wire formulas per device:
+collective-permute op, its per-device result bytes and replica group
+size, then apply ring-collective wire formulas *per device* (``s`` is
+the op's per-device result bytes as printed in the HLO):
 
-    all-reduce          2·s·(g-1)/g      (s = per-device result bytes)
-    all-gather          s_shard·(g-1)    (s_shard = operand bytes)
-    reduce-scatter      s_out·(g-1)      (s_out = result bytes)
+    all-reduce          2·s·(g-1)/g
+    all-gather          s·(g-1)/g     (s = gathered result, i.e. g·s_shard,
+                                       so this ≡ s_shard·(g-1): each device
+                                       ships its shard g-1 times)
+    reduce-scatter      s·(g-1)      (s = scattered result = operand/g;
+                                       mirror of all-gather)
     all-to-all          s·(g-1)/g
     collective-permute  s
+
+Summing the per-device wire bytes over all n participating devices gives
+the system-wide wire total (every device appears in exactly one replica
+group per op), which is the quantity the tiling solver's
+``TilingSolution.total_bytes`` predicts — see repro.verify.
+
+Async pairs: only the ``-start`` op is counted (the ``-done`` retires the
+same transfer).  A ``-start`` result is a tuple carrying the operand
+alongside the result; only the result half is priced.
 """
 from __future__ import annotations
 
@@ -23,19 +36,23 @@ _DTYPE_BYTES = {
     "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
 }
 
+KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\(",
+    r"(-start|-done)?\(",
     re.M)
 _GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
 _IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
-def shape_bytes(shape_str: str) -> float:
-    """Total bytes of an HLO shape string (handles tuples)."""
-    total = 0.0
+def _shape_entry_bytes(shape_str: str) -> List[float]:
+    """Bytes of each array entry in an HLO shape string (singleton for a
+    plain array shape, one entry per element for tuples)."""
+    out = []
     for dt, dims in _SHAPE_RE.findall(shape_str):
         if dt not in _DTYPE_BYTES:
             continue
@@ -44,16 +61,37 @@ def shape_bytes(shape_str: str) -> float:
             for d in dims.split(","):
                 if d:
                     n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+        out.append(float(n * _DTYPE_BYTES[dt]))
+    return out
+
+
+def shape_bytes(shape_str: str) -> float:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    return sum(_shape_entry_bytes(shape_str))
+
+
+def _result_bytes(shape_str: str, is_start: bool) -> float:
+    """Per-device result bytes of a collective.  Plain ops: the printed
+    result shape (sum over tuple entries for variadic collectives).
+    Async ``-start`` ops print ``(operands..., results...)`` — price only
+    the results half.  Context scalars some starts carry (e.g.
+    collective-permute-start's trailing ``u32[]`` pair) are dropped
+    *before* the midpoint split, or they would shift the real result
+    into the discarded operand half."""
+    entries = _shape_entry_bytes(shape_str)
+    if is_start and len(entries) >= 2:
+        arrays = [e for e in entries if e >= 16] or entries
+        return sum(arrays[len(arrays) // 2:])
+    return sum(entries)
 
 
 @dataclasses.dataclass
 class CollectiveStats:
     counts: Dict[str, int]
     result_bytes: Dict[str, float]      # per-device result bytes by kind
-    wire_bytes_per_device: float        # ring-model wire bytes
-    naive_operand_bytes: float          # "sum operand sizes" (spec formula)
+    wire_by_kind: Dict[str, float]      # per-device ring wire bytes by kind
+    wire_bytes_per_device: float        # total ring-model wire bytes
+    naive_operand_bytes: float          # "sum result sizes" (spec formula)
 
     def total(self) -> float:
         return self.wire_bytes_per_device
@@ -69,34 +107,42 @@ def _group_size(line: str, default: int) -> int:
     return default
 
 
+def ring_wire_bytes(kind: str, s: float, g: int) -> float:
+    """Per-device ring wire bytes for one collective (see module
+    docstring).  ``s``: per-device result bytes; ``g``: group size."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * s * (g - 1) / g
+    if kind == "all-gather":
+        return s * (g - 1) / g       # s is the gathered result here
+    if kind == "reduce-scatter":
+        return s * (g - 1)
+    if kind == "all-to-all":
+        return s * (g - 1) / g
+    if kind == "collective-permute":
+        return s
+    raise ValueError(kind)
+
+
 def collect(hlo_text: str, n_devices: int) -> CollectiveStats:
     counts: Dict[str, int] = {}
     res_bytes: Dict[str, float] = {}
-    wire = 0.0
+    wire_by_kind: Dict[str, float] = {}
     naive = 0.0
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _OP_RE.match(line)
         if not m:
             continue
-        shape_str, kind = m.group(1), m.group(2)
-        if "-done(" in line:
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
             continue  # async pair: count the -start only
-        s = shape_bytes(shape_str)
+        s = _result_bytes(shape_str, suffix == "-start")
         g = _group_size(line, n_devices)
         counts[kind] = counts.get(kind, 0) + 1
         res_bytes[kind] = res_bytes.get(kind, 0.0) + s
         naive += s
-        if g <= 1:
-            continue
-        if kind == "all-reduce":
-            wire += 2.0 * s * (g - 1) / g
-        elif kind == "all-gather":
-            wire += s * (g - 1) / g      # s is the gathered result here
-        elif kind == "reduce-scatter":
-            wire += s * (g - 1)
-        elif kind == "all-to-all":
-            wire += s * (g - 1) / g
-        elif kind == "collective-permute":
-            wire += s
-    return CollectiveStats(counts, res_bytes, wire, naive)
+        wire_by_kind[kind] = wire_by_kind.get(kind, 0.0) + \
+            ring_wire_bytes(kind, s, g)
+    return CollectiveStats(counts, res_bytes, wire_by_kind,
+                           sum(wire_by_kind.values()), naive)

@@ -1,0 +1,44 @@
+"""jax version-compat shims for mesh construction and mesh contexts.
+
+The repo targets the modern explicit-axis-type API (``jax.make_mesh(...,
+axis_types=(AxisType.Auto, ...))`` + ``jax.set_mesh``), but the pinned
+container jax (0.4.x) predates both ``jax.sharding.AxisType`` and
+``jax.set_mesh``.  Everything that builds or enters a mesh goes through
+these two helpers so the same code runs on either API:
+
+  make_compat_mesh(shape, axis_names)   -> Mesh (Auto axes when supported)
+  use_mesh(mesh)                        -> context manager for the mesh
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_compat_mesh(axis_shapes: Sequence[int],
+                     axis_names: Sequence[str],
+                     *, devices: Optional[Sequence] = None):
+    """``jax.make_mesh`` with ``AxisType.Auto`` axes where the installed
+    jax supports them, plain mesh otherwise (pre-0.5 jax has neither
+    ``jax.sharding.AxisType`` nor the ``axis_types`` kwarg; a plain Mesh
+    there behaves like all-Auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(axis_shapes), tuple(axis_names), devices=devices,
+                axis_types=(axis_type.Auto,) * len(tuple(axis_names)))
+        except TypeError:
+            pass  # AxisType exists but make_mesh predates the kwarg
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         devices=devices)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` on jax
+    versions that have it, else the Mesh object itself (the classic
+    ``with mesh:`` context)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -30,7 +30,7 @@ from typing import Dict, List
 
 from .graph import Graph, OpSpec
 from .tiling import (REDUCED, REPLICATE, Part, Tiling, conversion_cost,
-                     paper_naive_conversion_cost)
+                     conversion_kind, paper_naive_conversion_cost)
 
 Assignment = Dict[str, Tiling]
 
@@ -158,6 +158,58 @@ def op_cost(g: Graph, op: OpSpec, assign: Assignment, arity: int,
     """Eq. (2): min over aligned forms of total conversion cost, times the
     op's repeat factor."""
     return op_cost_base(g, op, assign, arity, naive) * op.repeat
+
+
+def op_cost_detail(g: Graph, op: OpSpec, assign: Assignment,
+                   arity: int) -> tuple:
+    """Like :func:`op_cost` but also returns *where* the bytes go: the
+    chosen aligned form's conversions as records
+    ``{"tensor", "role", "kind", "bytes"}`` (kind = the HLO collective the
+    conversion lowers to, or "recompute" for an aligned-form penalty).
+    Bytes include the op's repeat factor; their sum equals op_cost exactly
+    — this is the attribution side of the conformance subsystem (see
+    repro.verify.calibration)."""
+    tensors = g.op_tensors(op)
+    best = float("inf")
+    best_recs: List[dict] = []
+    for form, penalty in _aligned_forms(g, op, arity):
+        c = penalty
+        recs: List[dict] = []
+        if penalty:
+            recs.append({"tensor": op.output,
+                         "role": _attribution_role(g, op.output),
+                         "kind": "recompute", "bytes": penalty})
+        for t in tensors:
+            want = form.get(t, REPLICATE)
+            have = assign[t]
+            nbytes = g.tensors[t].nbytes
+            if t == op.output:
+                src, dst = want, have
+            else:
+                src, dst = have, want
+            step = conversion_cost(src, dst, nbytes, arity)
+            c += step
+            if c >= best:
+                break
+            if step:
+                recs.append({"tensor": t,
+                             "role": _attribution_role(g, t),
+                             "kind": conversion_kind(src, dst) or "other",
+                             "bytes": step})
+        else:
+            if c < best:
+                best = c
+                best_recs = recs
+    for r in best_recs:
+        r["bytes"] *= op.repeat
+    return best * op.repeat, best_recs
+
+
+def _attribution_role(g: Graph, tensor: str) -> str:
+    """Role key for per-role byte attribution: the tensor's declared role,
+    else a kind-level bucket (<grad>, <activation>, ...)."""
+    ts = g.tensors[tensor]
+    return ts.role or f"<{ts.kind}>"
 
 
 def op_cost_table(g: Graph, op: OpSpec, arity: int,

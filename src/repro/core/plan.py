@@ -47,14 +47,19 @@ class ShardingPlan:
             role_cuts[role] = cuts
         return cls(tuple(ax.name for ax in sol.axes), role_cuts)
 
+    def has_role(self, role: str) -> bool:
+        return role in self.role_cuts
+
     def pspec(self, role: str, phys_dims: Sequence[str],
               default: Optional[P] = None) -> P:
         """PartitionSpec for a physical array whose axes are named
-        ``phys_dims``.  Unknown roles return ``default`` (fully
-        replicated if None)."""
+        ``phys_dims``.  Unknown roles return ``default``, or fully
+        replicated (``P()``) when no default is given.  Callers that need
+        to *distinguish* an unknown role (e.g. to skip a sharding
+        constraint entirely) should check :meth:`has_role` first."""
         cuts = self.role_cuts.get(role)
         if cuts is None:
-            return default
+            return P() if default is None else default
         entries: List[List[str]] = [[] for _ in phys_dims]
         for ax in self.mesh_axis_names:
             d = cuts.get(ax)

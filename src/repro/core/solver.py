@@ -612,6 +612,41 @@ def composed_cost(g: Graph, axes: Sequence[MeshAxis],
     return total
 
 
+def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
+                       per_axis: Sequence[Assignment]) -> Dict[str, object]:
+    """Attribute a composed tiling's predicted bytes to collective kinds
+    and tensor roles, walking the same k-cut recursion as
+    :func:`composed_cost` (totals match it exactly).  Returns
+    ``{"total", "by_kind", "by_role", "by_axis"}`` with bytes weighted by
+    groups_above(i) — i.e. system-wide wire bytes, directly comparable to
+    ``hlo.collect(...).wire_bytes_per_device × n_devices`` on the
+    compiled program (repro.verify.calibration)."""
+    from .cost import op_cost_detail
+    cur = g
+    groups = 1
+    total = 0.0
+    by_kind: Dict[str, float] = {}
+    by_role: Dict[str, float] = {}
+    by_axis: Dict[str, float] = {}
+    for ax, assign in zip(axes, per_axis):
+        axis_total = 0.0
+        for op in cur.ops:
+            full = {t: assign.get(t, REPLICATE)
+                    for t in cur.op_tensors(op)}
+            c, recs = op_cost_detail(cur, op, full, ax.size)
+            axis_total += c * groups
+            for r in recs:
+                b = r["bytes"] * groups
+                by_kind[r["kind"]] = by_kind.get(r["kind"], 0.0) + b
+                by_role[r["role"]] = by_role.get(r["role"], 0.0) + b
+        by_axis[ax.name] = axis_total
+        total += axis_total
+        cur = cur.divided(assign, ax.size)
+        groups *= ax.size
+    return {"total": total, "by_kind": by_kind, "by_role": by_role,
+            "by_axis": by_axis}
+
+
 def assignment_cost_naive(g: Graph, axes: Sequence[MeshAxis],
                           per_axis: Sequence[Assignment]) -> float:
     """Paper §2.2 parameter-server accounting of a composed tiling.

@@ -109,6 +109,22 @@ def conversion_cost(src: Tiling, dst: Tiling, nbytes: float, arity: int) -> floa
     return nbytes * (a - 1.0) / a
 
 
+def conversion_kind(src: Tiling, dst: Tiling):
+    """The ring collective a (priced) conversion lowers to, named as in
+    compiled HLO (analysis/hlo.py), or None for free/identity moves.
+    Infeasible conversions (stored -> red) also return None — their cost
+    is inf and no collective exists for them."""
+    if src is REDUCED:
+        if dst is REDUCED:
+            return None
+        return "all-reduce" if dst is REPLICATE else "reduce-scatter"
+    if dst is REDUCED or src == dst or src is REPLICATE:
+        return None
+    if dst is REPLICATE:
+        return "all-gather"
+    return "all-to-all"
+
+
 def paper_naive_conversion_cost(src: Tiling, dst: Tiling, nbytes: float,
                                 arity: int) -> float:
     """The paper's §2.2 *illustrative* parameter-server accounting:

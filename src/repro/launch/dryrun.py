@@ -22,111 +22,27 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 import dataclasses
 
 from ..analysis import roofline as rf
 from ..configs.base import ASSIGNED, SHAPES, ArchConfig, ShapeConfig, get_arch
-from ..core.builders import build_graph
-from ..core.plan import ShardingPlan
-from ..core.solver import solve_mesh
 from ..models import attention as attention_mod
 from ..models.model import LM
-from ..models.sharding import (CACHE_RULES, batch_pspec, tree_shardings)
-from ..optim.adamw import AdamWConfig, apply_updates, init_state
-from .mesh import make_production_mesh, solver_axes
+# plan-solve + step-compile live in launch/compile.py (shared with the
+# repro.verify conformance subsystem); re-exported here for callers that
+# historically imported them from dryrun (launch/hillclimb.py).
+from .compile import (CACHE_DIR, compile_step, input_specs,  # noqa: F401
+                      normalize_moe_plan, plan_cache_path,
+                      plan_from_record, solve_plan)
+from .mesh import make_production_mesh
 
-CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                         ".cache", "plans")
-
-
-# ---------------------------------------------------------------------------
-# solver plan with on-disk cache
-# ---------------------------------------------------------------------------
-
-def plan_cache_path(arch: str, shape: str, mesh_name: str) -> str:
-    os.makedirs(CACHE_DIR, exist_ok=True)
-    return os.path.join(CACHE_DIR, f"{arch}_{shape}_{mesh_name}.json")
-
-
-def solve_plan(cfg: ArchConfig, shape: ShapeConfig, multi_pod: bool,
-               use_cache: bool = True,
-               capacity: bool = False) -> Dict[str, Any]:
-    mesh_name = ("pod2" if multi_pod else "pod1") +         ("_cap" if capacity else "")
-    path = plan_cache_path(cfg.name, shape.name, mesh_name)
-    if use_cache and os.path.exists(path):
-        with open(path) as f:
-            return json.load(f)
-    g = build_graph(cfg, shape)
-    axes = solver_axes(multi_pod=multi_pod)
-    t0 = time.time()
-    if capacity:
-        from ..core.solver import solve_mesh_capacity
-        sol = solve_mesh_capacity(g, axes, beam="auto")
-    else:
-        sol = solve_mesh(g, axes, beam="auto")
-    plan = ShardingPlan.from_graph_solution(sol, g)
-    rec = {
-        "mesh_axes": list(plan.mesh_axis_names),
-        "role_cuts": plan.role_cuts,
-        "total_bytes": sol.total_bytes,
-        "per_axis_bytes": sol.per_axis_bytes,
-        "total_seconds": sol.total_seconds,
-        "solve_time": time.time() - t0,
-    }
-    with open(path, "w") as f:
-        json.dump(rec, f, indent=1)
-    return rec
-
-
-def plan_from_record(rec: Dict[str, Any]) -> ShardingPlan:
-    return ShardingPlan(tuple(rec["mesh_axes"]),
-                        {r: dict(c) for r, c in rec["role_cuts"].items()})
-
-
-# ---------------------------------------------------------------------------
-# input specs (ShapeDtypeStruct stand-ins, no allocation)
-# ---------------------------------------------------------------------------
-
-def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
-    b, s = shape.global_batch, shape.seq_len
-    if shape.kind == "decode":
-        if cfg.embed_stub:
-            return {"tokens": jax.ShapeDtypeStruct((b, cfg.d_model),
-                                                   jnp.bfloat16)}
-        return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
-    specs: Dict[str, Any] = {}
-    if cfg.embed_stub:
-        specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
-                                               jnp.bfloat16)
-    else:
-        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
-    if shape.kind == "train":
-        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
-    return specs
+_compile_step = compile_step   # legacy alias
 
 
 # ---------------------------------------------------------------------------
 # per-cell dry run
 # ---------------------------------------------------------------------------
-
-def normalize_moe_plan(plan: ShardingPlan, cfg: ArchConfig,
-                       axis: str = "model") -> ShardingPlan:
-    """The shard_map MoE dispatch supports expert-dim sharding on one
-    axis (standard expert parallelism); pin the expert-weight roles to
-    that canonical layout."""
-    if cfg.moe is None:
-        return plan
-    full = {a: None for a in plan.mesh_axis_names}
-    ep = dict(full)
-    if cfg.moe.n_experts % 16 == 0:
-        ep[axis] = "expert"
-    for role in ("moe_up", "moe_down"):
-        plan = plan.with_override(role, dict(ep))
-    plan = plan.with_override("moe_gate", dict(full))
-    return plan
-
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: Optional[str] = None,
@@ -143,16 +59,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         _write(out_dir, rec)
         return rec
 
-    t_start = time.time()
     prec = solve_plan(cfg, shape, multi_pod, use_cache, capacity)
     plan = normalize_moe_plan(plan_from_record(prec), cfg)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     ins = input_specs(cfg, shape)
 
-    compiled, t_lower, t_compile = _compile_step(
+    compiled, t_lower, t_compile = compile_step(
         cfg, shape, plan, mesh, ins, layer_loop="scan")
-    t_lower -= t_start - t_start  # keep names
 
     mf = rf.model_train_flops(cfg, shape)
     text = compiled.as_text()
@@ -170,8 +84,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     try:
         for d in (d1, d2):
             cfg_d = dataclasses.replace(cfg, n_layers=d)
-            comp_d, _, _ = _compile_step(cfg_d, shape, plan, mesh, ins,
-                                         layer_loop="unrolled")
+            comp_d, _, _ = compile_step(cfg_d, shape, plan, mesh, ins,
+                                        layer_loop="unrolled")
             probes[d] = rf.analyze(
                 comp_d, comp_d.as_text(), n_dev,
                 rf.model_train_flops(cfg_d, shape), arch, shape_name,
@@ -254,70 +168,6 @@ def _slstm_correction(cfg, shape, plan, n_dev) -> float:
     per_step = 2.0 * b * cfg.n_heads * hd * 4 * hd
     mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd recompute
     return mult * (s - 1) * per_step * (cfg.n_layers / 2)
-
-
-def _compile_step(cfg, shape, plan, mesh, ins, layer_loop):
-    t0 = time.time()
-    model = LM(cfg, plan=plan, attn_impl="xla", mesh=mesh,
-               layer_loop=layer_loop)
-    key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
-        params_s = jax.eval_shape(model.init, key)
-        params_sh = tree_shardings(plan, params_s, mesh)
-        if shape.kind == "decode":
-            cache_s = jax.eval_shape(
-                lambda: model.init_cache(shape.global_batch,
-                                         shape.seq_len))
-            cache_sh = tree_shardings(plan, cache_s, mesh,
-                                      rules=CACHE_RULES)
-            tok_sh = jax.sharding.NamedSharding(
-                mesh, batch_pspec(plan, "decode"))
-
-            def serve_step(params, cache, tokens):
-                return model.decode_step(params, cache, tokens)
-
-            jitted = jax.jit(serve_step,
-                             in_shardings=(params_sh, cache_sh, tok_sh))
-            lowered = jitted.lower(params_s, cache_s, ins["tokens"])
-        elif shape.kind == "prefill":
-            bsh = jax.sharding.NamedSharding(mesh,
-                                             batch_pspec(plan, "prefill"))
-            in_sh = (params_sh,
-                     {k: bsh for k in ins})
-
-            def prefill_step(params, batch):
-                logits, _ = model.forward(params, batch.get("tokens"),
-                                          batch.get("embeds"))
-                return logits
-
-            jitted = jax.jit(prefill_step, in_shardings=in_sh)
-            lowered = jitted.lower(params_s, ins)
-        else:
-            opt_s = jax.eval_shape(init_state, params_s)
-            opt_sh = tree_shardings(plan, opt_s, mesh)
-            bspec = batch_pspec(plan, "train")
-            b_sh = {k: jax.sharding.NamedSharding(
-                        mesh, bspec["tokens"] if k != "embeds"
-                        else batch_pspec(plan, "prefill"))
-                    for k in ins}
-            ocfg = AdamWConfig()
-
-            def train_step(params, opt, batch):
-                def loss_fn(p):
-                    return model.loss(p, batch)
-                loss, grads = jax.value_and_grad(loss_fn)(params)
-                params2, opt2, gnorm = apply_updates(params, grads, opt,
-                                                     ocfg)
-                return params2, opt2, loss, gnorm
-
-            jitted = jax.jit(train_step,
-                             in_shardings=(params_sh, opt_sh, b_sh),
-                             donate_argnums=(0, 1))
-            lowered = jitted.lower(params_s, opt_s, ins)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
-    return compiled, t_lower, t_compile
 
 
 def _write(out_dir, rec):

@@ -8,8 +8,7 @@ from __future__ import annotations
 
 from typing import List
 
-import jax
-
+from ..compat import make_compat_mesh
 from ..core.solver import MeshAxis
 
 # TPU v5e-class hardware constants (used by the roofline + solver weights)
@@ -23,9 +22,7 @@ DCN_BW = 6.25e9              # inter-pod (pod axis) per host, ~50 Gb/s
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes)
 
 
 def solver_axes(*, multi_pod: bool = False) -> List[MeshAxis]:
@@ -40,6 +37,4 @@ def solver_axes(*, multi_pod: bool = False) -> List[MeshAxis]:
 
 def make_demo_mesh(n_data: int = 4, n_model: int = 2):
     """Small mesh for CPU multi-device tests (host device count permits)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_compat_mesh((n_data, n_model), ("data", "model"))

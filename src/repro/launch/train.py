@@ -13,9 +13,9 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
 import numpy as np
 
+from ..compat import make_compat_mesh, use_mesh
 from ..configs.base import SHAPES, get_arch
 from ..core.builders import transformer_graph
 from ..core.plan import ShardingPlan
@@ -51,9 +51,7 @@ def main():
     mesh_ctx = None
     if args.mesh:
         nd, nm = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh(
-            (nd, nm), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_compat_mesh((nd, nm), ("data", "model"))
         shape = ShapeConfig("cli", args.seq, args.batch, "train")
         g = transformer_graph(cfg, shape)
         sol = solve_mesh(g, [MeshAxis("data", nd), MeshAxis("model", nm)],
@@ -61,7 +59,7 @@ def main():
         plan = ShardingPlan.from_graph_solution(sol, g)
         print("solver plan:")
         print(plan.describe())
-        mesh_ctx = jax.set_mesh(mesh)
+        mesh_ctx = use_mesh(mesh)
 
     model = LM(cfg, plan=plan)
     dcfg = DataConfig(seed=args.seed, vocab=cfg.vocab, seq_len=args.seq,

@@ -12,10 +12,10 @@ def shard(x, plan, role: str, phys_dims: Sequence[str]):
     """Apply a solver-derived sharding constraint; no-op without a plan."""
     if plan is None:
         return x
-    spec = plan.pspec(role, phys_dims, default=None)
-    if spec is None:
+    if not plan.has_role(role):
         # unknown role: do NOT constrain (P() would force replication!)
         return x
+    spec = plan.pspec(role, phys_dims)
     try:
         return jax.lax.with_sharding_constraint(x, spec)
     except (ValueError, RuntimeError):

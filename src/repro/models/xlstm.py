@@ -53,11 +53,13 @@ def mlstm_forward(params, x, cfg: ArchConfig):
     # per-head gates
     logf = jax.nn.log_sigmoid(gf.astype(jnp.float32))        # [B,S,H]
     i_g = jnp.exp(jnp.clip(gi.astype(jnp.float32), -10., 10.))
-    vh = v.reshape(b, s, h, hd) * i_g[..., None]
+    # f32 before the scale so this path matches mlstm_step exactly (a
+    # bf16 k·hd^-0.5 here is the one rounding the step path doesn't do)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32) * i_g[..., None]
     # mLSTM == SSD with state dim = hd (keys) shared per head: here B/C are
     # per-head, so run heads via vmap over the head axis folded into batch.
-    kh = k.reshape(b, s, h, hd) * (hd ** -0.5)
-    qh = q.reshape(b, s, h, hd)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32) * (hd ** -0.5)
+    qh = q.reshape(b, s, h, hd).astype(jnp.float32)
     # fold heads into batch for ssd_scan's shared-B/C layout
     vf = vh.transpose(0, 2, 1, 3).reshape(b * h, s, 1, hd)
     kf = kh.transpose(0, 2, 1, 3).reshape(b * h, s, hd)

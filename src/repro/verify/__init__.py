@@ -1,0 +1,20 @@
+"""Conformance & calibration subsystem (see DESIGN.md §9).
+
+Three pillars, each checking a different link between the paper's tiling
+solver and what actually runs:
+
+- **differential numerics** (`numerics.py`): a solved plan's sharded
+  train / prefill / decode step must compute the same numbers as the
+  single-device serial program, per architecture family.
+- **cost-model calibration** (`calibration.py`): the solver's predicted
+  wire bytes must agree — within a declared tolerance band — with the
+  collectives the compiled SPMD HLO actually emits, and the solved plan
+  must never measure worse than the pure-data-parallel baseline.
+- **randomized graph fuzzing** (`fuzz.py`): solver invariants
+  (brute-force-oracle optimality, dim/tensor permutation invariance,
+  replication feasibility, sharded-vs-serial execution equality) on
+  random small semantic graphs.
+
+CLI: ``python -m repro.verify`` (this module imports nothing heavy so
+the CLI can force the host-device count before jax initializes).
+"""

@@ -1,0 +1,133 @@
+import os
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        " --xla_force_host_platform_device_count=8").strip()
+
+"""Conformance & calibration CLI.  The env line above MUST run before
+jax initializes: the verification mesh needs 8 host devices.
+
+Usage:
+  python -m repro.verify                        # all cells + fuzz 25
+  python -m repro.verify --cells dense-train,xlstm-decode
+  python -m repro.verify --fuzz 200             # all cells + 200 graphs
+  python -m repro.verify --no-cells --fuzz 500  # fuzz only
+  python -m repro.verify --json                 # report to stdout
+  python -m repro.verify --list                 # known cells
+
+Writes the report to --out (default
+experiments/conformance/CONFORMANCE.json) and exits non-zero when any
+gate fails.
+"""
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.verify",
+        description="verify solver plans against executed numerics and "
+                    "compiled-HLO communication")
+    ap.add_argument("--cells", default=None,
+                    help="comma-separated cell names (default: all)")
+    ap.add_argument("--no-cells", action="store_true",
+                    help="skip conformance cells (fuzz only)")
+    ap.add_argument("--fuzz", type=int, default=25, metavar="N",
+                    help="number of random graphs (default 25; 0 skips)")
+    ap.add_argument("--fuzz-seed", type=int, default=0)
+    ap.add_argument("--exec-every", type=int, default=10,
+                    help="run the sharded-execution fuzz invariant on "
+                         "every N-th graph (jit compiles are the "
+                         "fuzz bottleneck)")
+    ap.add_argument("--no-numerics", action="store_true")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the pure-data-parallel measured baseline")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full report as JSON to stdout")
+    ap.add_argument("--out", default="experiments/conformance/"
+                                     "CONFORMANCE.json",
+                    help="report path ('' disables the file)")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    from .cells import CELLS, MESH_AXES, MESH_SHAPE, get_cells
+    if args.list:
+        for c in CELLS:
+            print(f"{c.name:16s} {c.arch:22s} {c.family:12s} {c.kind}")
+        return 0
+
+    import jax
+
+    from ..compat import make_compat_mesh
+    t_start = time.time()
+    report = {
+        "meta": {
+            "jax": jax.__version__,
+            "n_devices": jax.device_count(),
+            "mesh": dict(zip(MESH_AXES, MESH_SHAPE)),
+        },
+    }
+
+    ok = True
+    if not args.no_cells:
+        from .calibration import (ABS_FLOOR, DP_SLACK, RATIO_HI,
+                                  RATIO_LO, run_cells)
+        report["meta"]["tolerance"] = {
+            "ratio_band": [RATIO_LO, RATIO_HI],
+            "abs_floor_bytes": ABS_FLOOR,
+            "dp_slack": DP_SLACK,
+        }
+        specs = get_cells(args.cells.split(",") if args.cells else None)
+        mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
+        recs = run_cells(specs, mesh, numerics=not args.no_numerics,
+                         baseline=not args.no_baseline,
+                         verbose=not args.json)
+        report["cells"] = recs
+        ok &= all(r["status"] == "ok" for r in recs)
+
+    if args.fuzz:
+        from .fuzz import run_fuzz
+        exec_mesh = None
+        if jax.device_count() >= 4:
+            exec_mesh = make_compat_mesh((4,), ("fz",),
+                                         devices=jax.devices()[:4])
+        t0 = time.time()
+        fz = run_fuzz(args.fuzz, seed=args.fuzz_seed,
+                      exec_mesh=exec_mesh,
+                      exec_every=max(1, args.exec_every))
+        report["fuzz"] = fz.to_dict() | {"seconds": time.time() - t0}
+        if not args.json:
+            print(f"[{'ok' if fz.ok else 'FAIL'}] fuzz n={fz.n} "
+                  f"oracle={fz.oracle_checked} "
+                  f"perm={fz.permutation_checked} "
+                  f"exec={fz.exec_checked} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+            for f in fz.failures[:20]:
+                print(f"  FAIL {f}", flush=True)
+        ok &= fz.ok
+
+    report["pass"] = bool(ok)
+    report["seconds"] = time.time() - t_start
+
+    if args.out:
+        out_dir = os.path.dirname(args.out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        if not args.json:
+            print(f"report -> {args.out}", flush=True)
+    if args.json:
+        json.dump(report, sys.stdout, indent=1)
+        print()
+    if not args.json:
+        print(f"verify: {'PASS' if ok else 'FAIL'} "
+              f"({report['seconds']:.0f}s)", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

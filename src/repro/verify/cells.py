@@ -1,0 +1,64 @@
+"""Conformance cell registry: (architecture family × phase) cells small
+enough to solve, compile and *execute* on a forced-host-device mesh, yet
+structurally faithful (same builders, same models, same compile path as
+the production dry-run — launch/compile.py)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from ..configs.base import ArchConfig, ShapeConfig, get_arch
+
+# verification mesh: 8 host devices as data=4 × model=2 (matches
+# tests/test_multidevice.py); solver axes mirror it with equal-bandwidth
+# ICI weights.
+MESH_SHAPE = (4, 2)
+MESH_AXES = ("data", "model")
+N_DEVICES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    name: str          # e.g. "dense-train"
+    arch: str          # registry arch id (reduced() is applied)
+    family: str        # dense | moe | hybrid/ssd | xlstm
+    kind: str          # train | prefill | decode
+    seq_len: int = 32
+    batch: int = 16
+
+    def cfg(self) -> ArchConfig:
+        return get_arch(self.arch).reduced()
+
+    def shape(self) -> ShapeConfig:
+        return ShapeConfig(f"conf_{self.kind}", self.seq_len, self.batch,
+                           self.kind)
+
+
+# decode/prefill cells use batch=4 < n_devices: a pure batch partition
+# cannot cover the mesh, so the solved plan must shard model dims and the
+# compiled program emits *real* collectives — calibration then checks a
+# meaningful ratio instead of 0-vs-0.
+CELLS: List[CellSpec] = [
+    CellSpec("dense-train", "llama3.2-3b", "dense", "train"),
+    CellSpec("dense-decode", "llama3.2-3b", "dense", "decode", batch=4),
+    CellSpec("gqa-prefill", "qwen2-1.5b", "dense", "prefill", batch=4),
+    CellSpec("moe-train", "moonshot-v1-16b-a3b", "moe", "train"),
+    CellSpec("moe-decode", "moonshot-v1-16b-a3b", "moe", "decode",
+             batch=4),
+    CellSpec("hybrid-train", "zamba2-2.7b", "hybrid/ssd", "train"),
+    CellSpec("hybrid-decode", "zamba2-2.7b", "hybrid/ssd", "decode",
+             batch=4),
+    CellSpec("xlstm-train", "xlstm-125m", "xlstm", "train"),
+    CellSpec("xlstm-decode", "xlstm-125m", "xlstm", "decode", batch=4),
+]
+
+
+def get_cells(names: Optional[Sequence[str]] = None) -> List[CellSpec]:
+    if not names:
+        return list(CELLS)
+    by_name = {c.name: c for c in CELLS}
+    missing = [n for n in names if n not in by_name]
+    if missing:
+        raise KeyError(f"unknown cells {missing}; known: "
+                       f"{sorted(by_name)}")
+    return [by_name[n] for n in names]

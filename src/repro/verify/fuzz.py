@@ -1,0 +1,264 @@
+"""Randomized semantic-graph fuzzing of the tiling solver.
+
+Generates small random graphs (random einsum-like ops over named dims,
+random dim sizes, occasional weights/reductions) and asserts the solver
+invariants that must hold on *every* graph:
+
+  oracle       solve_one_cut cost == solve_one_cut_bruteforce cost
+               (exhaustive enumeration is the optimality oracle)
+  permutation  renaming dims/tensors, shuffling tensor insertion order
+               and swapping einsum operands never changes the optimum
+  replication  the all-REPLICATE assignment is always feasible (finite
+               cost) and never beats the solver
+  execution    a solved plan, forced onto a real device mesh via
+               ShardingPlan, computes the same numbers as the serial
+               program (executor.py)
+
+Plain ``random.Random`` generation so the fuzzer runs in minimal
+containers; when the real `hypothesis` package is installed,
+:func:`graph_strategy` wraps the same generator as a search strategy for
+property-based tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import string
+from typing import Dict, List, Optional
+
+from ..core.cost import graph_cost
+from ..core.graph import Graph
+from ..core.solver import (MeshAxis, solve_mesh, solve_one_cut,
+                           solve_one_cut_bruteforce)
+from ..core.tiling import REPLICATE
+
+_DIM_SIZES = (2, 4, 8)
+_MAX_BRUTE_COMBOS = 200_000
+
+
+def random_graph(rng: random.Random, min_ops: int = 2,
+                 max_ops: int = 5) -> Graph:
+    """Small random semantic graph: a chain of einsum / ewise / reduce
+    ops over 2-3-dim tensors with named dims sized in {2,4,8}."""
+    g = Graph(f"fuzz{rng.randrange(1 << 30)}")
+    names = iter(string.ascii_lowercase)
+    sizes: Dict[str, int] = {}
+
+    def new_dim() -> str:
+        d = f"d{next(names)}"
+        sizes[d] = rng.choice(_DIM_SIZES)
+        return d
+
+    def add(name, dims, kind="activation", role=None):
+        g.tensor(name, dims, tuple(sizes[d] for d in dims),
+                 bytes_per_elem=4.0, kind=kind, role=role)
+        return name
+
+    n_dims = rng.randint(2, 3)
+    x_dims = tuple(new_dim() for _ in range(n_dims))
+    x = add("x0", x_dims, kind="input")
+    acts: List[str] = [x]
+    n_ops = rng.randint(min_ops, max_ops)
+    for i in range(n_ops):
+        src = rng.choice(acts)
+        sdims = g.tensors[src].dims
+        op_kind = rng.choice(["einsum", "einsum", "einsum", "ewise",
+                              "reduce"])
+        if op_kind == "reduce" and len(sdims) < 2:
+            op_kind = "ewise"
+        if op_kind == "einsum":
+            c = rng.choice(sdims)              # contraction dim
+            n = new_dim()                      # fresh output dim
+            wdims = (c, n)
+            if len(sdims) > 1 and rng.random() < 0.3:
+                b = rng.choice([d for d in sdims if d != c])
+                wdims = (b, c, n)              # batched einsum
+            w = add(f"w{i}", wdims, kind="weight", role=f"w{i}")
+            out = add(f"t{i}", tuple(n if d == c else d for d in sdims))
+            if rng.random() < 0.5:
+                g.einsum(f"mm{i}", src, w, out)
+            else:
+                g.einsum(f"mm{i}", w, src, out)
+        elif op_kind == "ewise":
+            ins = [src]
+            if rng.random() < 0.5:
+                # broadcast partner over a dim subset of src
+                keep = [d for d in sdims if rng.random() < 0.7] or \
+                    [sdims[0]]
+                ins.append(add(f"b{i}", tuple(keep), kind="input"))
+            out = add(f"t{i}", sdims)
+            align = None
+            if rng.random() < 0.3:
+                align = tuple(d for d in sdims if rng.random() < 0.7) \
+                    or (sdims[0],)
+            g.ewise(f"ew{i}", tuple(ins), out, align_dims=align)
+        else:  # reduce
+            axis = rng.choice(sdims)
+            out = add(f"t{i}", tuple(d for d in sdims if d != axis))
+            g.reduce(f"rd{i}", src, out, axis=axis)
+        acts.append(out)
+    return g
+
+
+def brute_combo_count(g: Graph, arity: int) -> int:
+    from ..core.cost import tensor_tiling_choices
+    n = 1
+    for t in g.tensors:
+        n *= len(tensor_tiling_choices(g, t, arity))
+    return n
+
+
+def permuted_clone(g: Graph, rng: random.Random) -> Graph:
+    """Isomorphic copy: dims and tensors renamed, tensor insertion order
+    shuffled (op order kept — it is already topological).  The solver
+    optimum must be identical on it."""
+    dim_map = {}
+    for ts in g.tensors.values():
+        for d in ts.dims:
+            if d not in dim_map:
+                dim_map[d] = f"p{len(dim_map)}_{d}"
+    name_map = {t: f"perm_{t}" for t in g.tensors}
+
+    g2 = Graph(g.name + ":perm", g.allow_uneven)
+    order = list(g.tensors)
+    rng.shuffle(order)
+    for t in order:
+        ts = g.tensors[t]
+        g2.tensor(name_map[t], tuple(dim_map[d] for d in ts.dims),
+                  ts.shape, ts.bytes_per_elem, ts.kind, ts.role,
+                  {dim_map[d]: u for d, u in ts.units.items()})
+    for op in g.ops:
+        ins = tuple(name_map[t] for t in op.inputs)
+        out = name_map[op.output]
+        if op.kind == "einsum":
+            g2.einsum(op.name, ins[0], ins[1], out, op.repeat)
+        elif op.kind == "ewise":
+            wl = op.attrs.get("align_dims")
+            g2.ewise(op.name, ins, out, op.repeat,
+                     align_dims=None if wl is None else
+                     tuple(dim_map[d] for d in wl),
+                     update=bool(op.attrs.get("update")))
+        elif op.kind == "reduce":
+            g2.reduce(op.name, ins[0], out,
+                      axis=dim_map[op.attrs["axis"]], repeat=op.repeat)
+        else:
+            raise NotImplementedError(op.kind)
+    return g2
+
+
+@dataclasses.dataclass
+class FuzzResult:
+    n: int
+    arities: List[int]
+    oracle_checked: int = 0
+    permutation_checked: int = 0
+    exec_checked: int = 0
+    skipped_too_big: int = 0
+    failures: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self) | {"ok": self.ok}
+
+
+def check_graph(g: Graph, arity: int, rng: random.Random,
+                result: FuzzResult, exec_mesh=None,
+                atol: float = 2e-4) -> None:
+    """Run all invariants on one graph; append failures to ``result``."""
+    rel = 1e-9
+
+    def close(a, b):
+        return abs(a - b) <= rel * max(abs(a), abs(b), 1.0)
+
+    # replication always feasible
+    repl = graph_cost(g, {t: REPLICATE for t in g.tensors}, arity,
+                      mem_scale=1.0)
+    if repl == float("inf"):
+        result.failures.append(f"{g.name}@{arity}: replication infeasible")
+        return
+
+    sol = solve_one_cut(g, arity, beam="auto")
+    if not (0.0 <= sol.cost <= repl + 1e-9):
+        result.failures.append(
+            f"{g.name}@{arity}: solver cost {sol.cost} outside "
+            f"[0, replication={repl}]")
+
+    # the returned assignment must price to the returned cost
+    priced = graph_cost(g, sol.assignment, arity, mem_scale=1.0)
+    if not close(priced, sol.cost):
+        result.failures.append(
+            f"{g.name}@{arity}: assignment prices to {priced}, "
+            f"solver said {sol.cost}")
+
+    # brute-force oracle
+    if brute_combo_count(g, arity) <= _MAX_BRUTE_COMBOS:
+        oracle = solve_one_cut_bruteforce(g, arity, workers=0)
+        result.oracle_checked += 1
+        if not close(sol.cost, oracle.cost):
+            result.failures.append(
+                f"{g.name}@{arity}: solver {sol.cost} != oracle "
+                f"{oracle.cost}")
+    else:
+        result.skipped_too_big += 1
+
+    # permutation invariance
+    g2 = permuted_clone(g, rng)
+    sol2 = solve_one_cut(g2, arity, beam="auto")
+    result.permutation_checked += 1
+    if not close(sol.cost, sol2.cost):
+        result.failures.append(
+            f"{g.name}@{arity}: permuted clone cost {sol2.cost} != "
+            f"{sol.cost}")
+
+    # sharded-vs-serial execution of the solved plan
+    if exec_mesh is not None:
+        from . import executor
+        import numpy as np
+
+        msol = solve_mesh(g, [MeshAxis(exec_mesh.axis_names[0],
+                                       exec_mesh.devices.size)])
+        plan = executor.tensor_plan(g, msol)
+        vals = executor.random_values(g, seed=rng.randrange(1 << 30))
+        serial = executor.execute(g, vals)
+        sharded = executor.execute_sharded(g, vals, plan, exec_mesh)
+        result.exec_checked += 1
+        for t, v in sharded.items():
+            ref = np.asarray(serial[t], np.float32)
+            got = np.asarray(v, np.float32)
+            err = float(np.max(np.abs(ref - got))) if ref.size else 0.0
+            scale = float(np.max(np.abs(ref))) if ref.size else 0.0
+            if err > atol * max(1.0, scale):
+                result.failures.append(
+                    f"{g.name}@mesh: sharded {t} differs by {err} "
+                    f"(scale {scale})")
+
+
+def run_fuzz(n: int, seed: int = 0, arities=(2, 4),
+             exec_mesh=None, exec_every: int = 10) -> FuzzResult:
+    """Fuzz ``n`` random graphs.  ``exec_mesh``: a 1-D device mesh for
+    the execution invariant, exercised on every ``exec_every``-th graph
+    (jit compiles dominate fuzz wall-time otherwise)."""
+    rng = random.Random(seed)
+    result = FuzzResult(n=n, arities=list(arities))
+    for i in range(n):
+        g = random_graph(rng)
+        arity = arities[i % len(arities)]
+        mesh = exec_mesh if (exec_mesh is not None
+                             and i % exec_every == 0) else None
+        try:
+            check_graph(g, arity, rng, result, exec_mesh=mesh)
+        except Exception as e:  # invariant machinery itself blew up
+            result.failures.append(f"{g.name}@{arity}: exception {e!r}")
+    return result
+
+
+def graph_strategy(min_ops: int = 2, max_ops: int = 5):
+    """Hypothesis strategy over random graphs (only when the real
+    `hypothesis` is installed; tests fall back to seeded ``run_fuzz``)."""
+    from hypothesis import strategies as st
+
+    return st.integers(min_value=0, max_value=1 << 30).map(
+        lambda s: random_graph(random.Random(s), min_ops, max_ops))

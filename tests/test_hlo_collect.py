@@ -1,0 +1,150 @@
+"""analysis/hlo.py::collect on synthetic partitioned-HLO text: all five
+collective kinds, tuple shapes, iota vs explicit replica_groups, and
+async ``-start``/``-done`` pairs (only the ``-start`` is priced)."""
+import pytest
+
+from repro.analysis import hlo
+
+
+def one_op(line: str, n_dev: int = 8) -> hlo.CollectiveStats:
+    return hlo.collect(f"ENTRY %main {{\n{line}\n  ROOT %t = tuple()\n}}",
+                       n_dev)
+
+
+class TestKinds:
+    """One op per collective kind; per-device ring wire formulas from the
+    module docstring, with s = per-device result bytes."""
+
+    def test_all_reduce(self):
+        st = one_op("  %ar = f32[256]{0} all-reduce(f32[256]{0} %x), "
+                    "replica_groups={{0,1,2,3}}, to_apply=%add")
+        s = 256 * 4
+        assert st.counts == {"all-reduce": 1}
+        assert st.wire_bytes_per_device == pytest.approx(2 * s * 3 / 4)
+
+    def test_all_gather_formula_is_shard_times_gm1(self):
+        # result = gathered tensor (g×shard): s_result·(g-1)/g must equal
+        # s_shard·(g-1) — the docstring's two readings are the same number
+        st = one_op("  %ag = bf16[4,1024]{1,0} all-gather(bf16[4,256]{1,0}"
+                    " %x), replica_groups={{0,1,2,3}}, dimensions={1}")
+        s_result = 4 * 1024 * 2
+        s_shard = 4 * 256 * 2
+        assert st.wire_bytes_per_device == pytest.approx(s_result * 3 / 4)
+        assert st.wire_bytes_per_device == pytest.approx(s_shard * 3)
+
+    def test_reduce_scatter(self):
+        st = one_op("  %rs = f32[64]{0} reduce-scatter(f32[256]{0} %x), "
+                    "replica_groups={{0,1,2,3}}, dimensions={0}")
+        assert st.wire_bytes_per_device == pytest.approx(64 * 4 * 3)
+
+    def test_all_to_all(self):
+        st = one_op("  %aa = f32[128]{0} all-to-all(f32[128]{0} %x), "
+                    "replica_groups={{0,1,2,3}}, dimensions={0}")
+        assert st.wire_bytes_per_device == pytest.approx(128 * 4 * 3 / 4)
+
+    def test_collective_permute(self):
+        st = one_op("  %cp = bf16[128]{0} collective-permute(bf16[128]{0}"
+                    " %x), source_target_pairs={{0,1},{1,0}}")
+        assert st.wire_bytes_per_device == pytest.approx(128 * 2)
+
+    def test_ring_wire_bytes_rejects_unknown_kind(self):
+        with pytest.raises(ValueError):
+            hlo.ring_wire_bytes("broadcast", 1.0, 4)
+
+
+class TestGroups:
+    def test_iota_replica_groups(self):
+        # [n_groups, group_size]: 8 groups of 4 on 32 devices
+        st = one_op("  %ar = f32[100]{0} all-reduce(f32[100]{0} %x), "
+                    "replica_groups=[8,4]<=[32], to_apply=%add", n_dev=32)
+        assert st.wire_bytes_per_device == pytest.approx(2 * 400 * 3 / 4)
+
+    def test_explicit_replica_groups(self):
+        st = one_op("  %ar = f32[100]{0} all-reduce(f32[100]{0} %x), "
+                    "replica_groups={{0,1},{2,3}}, to_apply=%add")
+        assert st.wire_bytes_per_device == pytest.approx(2 * 400 * 1 / 2)
+
+    def test_missing_groups_defaults_to_n_devices(self):
+        st = one_op("  %ar = f32[100]{0} all-reduce(f32[100]{0} %x), "
+                    "to_apply=%add", n_dev=8)
+        assert st.wire_bytes_per_device == pytest.approx(2 * 400 * 7 / 8)
+
+    def test_group_of_one_is_free(self):
+        st = one_op("  %ar = f32[100]{0} all-reduce(f32[100]{0} %x), "
+                    "replica_groups={{0}}, to_apply=%add")
+        assert st.counts["all-reduce"] == 1
+        assert st.wire_bytes_per_device == 0.0
+
+
+class TestTuplesAndAsync:
+    def test_shape_bytes_tuple(self):
+        assert hlo.shape_bytes("(bf16[2,2], f32[4])") == 8 + 16
+
+    def test_variadic_tuple_result_sums_entries(self):
+        # variadic all-reduce: tuple result, total = sum of entries
+        st = one_op("  %ar = (f32[8]{0}, f32[24]{0}) all-reduce("
+                    "f32[8]{0} %a, f32[24]{0} %b), "
+                    "replica_groups={{0,1,2,3}}, to_apply=%add")
+        assert st.result_bytes["all-reduce"] == 32 * 4
+        assert st.wire_bytes_per_device == pytest.approx(2 * 32 * 4 * 3 / 4)
+
+    def test_async_start_counts_result_half_done_skipped(self):
+        text = """
+ENTRY %main {
+  %ags = (bf16[4,256]{1,0}, bf16[4,1024]{1,0}) all-gather-start(bf16[4,256]{1,0} %x), replica_groups={{0,1,2,3}}, dimensions={1}
+  %agd = bf16[4,1024]{1,0} all-gather-done((bf16[4,256]{1,0}, bf16[4,1024]{1,0}) %ags)
+}
+"""
+        st = hlo.collect(text, 8)
+        assert st.counts == {"all-gather": 1}
+        # only the result half of the -start tuple is priced
+        assert st.result_bytes["all-gather"] == 4 * 1024 * 2
+        assert st.wire_bytes_per_device == pytest.approx(4 * 1024 * 2 * 3 / 4)
+
+    def test_async_permute_context_scalars_dropped(self):
+        # classic cp-start shape: (operand, result, u32[], u32[]) — the
+        # context pair must not shift the result out of the priced half
+        text = """
+ENTRY %main {
+  %cps = (f32[256]{0}, f32[256]{0}, u32[], u32[]) collective-permute-start(f32[256]{0} %x), source_target_pairs={{0,1}}
+  %cpd = f32[256]{0} collective-permute-done((f32[256]{0}, f32[256]{0}, u32[], u32[]) %cps)
+}
+"""
+        st = hlo.collect(text, 8)
+        assert st.counts == {"collective-permute": 1}
+        assert st.wire_bytes_per_device == pytest.approx(256 * 4)
+
+    def test_async_all_reduce_plain_shape(self):
+        text = """
+ENTRY %main {
+  %ars = f32[64]{0} all-reduce-start(f32[64]{0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ard = f32[64]{0} all-reduce-done(f32[64]{0} %ars)
+}
+"""
+        st = hlo.collect(text, 8)
+        assert st.counts == {"all-reduce": 1}
+        assert st.wire_bytes_per_device == pytest.approx(2 * 64 * 4 * 3 / 4)
+
+
+class TestAggregation:
+    def test_per_kind_breakdown_sums_to_total(self):
+        text = """
+ENTRY %main {
+  %ag = bf16[4,1024]{1,0} all-gather(bf16[4,256]{1,0} %x), replica_groups={{0,1,2,3}}, dimensions={1}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), replica_groups=[8,4]<=[32], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(f32[256]{0} %z), replica_groups={{0,1,2,3}}
+  %cp = bf16[128]{0} collective-permute(bf16[128]{0} %w), source_target_pairs={{0,1}}
+}
+"""
+        st = hlo.collect(text, 32)
+        assert set(st.wire_by_kind) == {"all-gather", "all-reduce",
+                                        "reduce-scatter",
+                                        "collective-permute"}
+        assert st.wire_bytes_per_device == \
+            pytest.approx(sum(st.wire_by_kind.values()))
+        assert st.total() == st.wire_bytes_per_device
+
+    def test_empty_text(self):
+        st = hlo.collect("ENTRY %m { ROOT %t = tuple() }", 8)
+        assert st.wire_bytes_per_device == 0.0
+        assert st.counts == {}

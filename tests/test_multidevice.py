@@ -12,6 +12,11 @@ import textwrap
 
 import pytest
 
+# Subprocess tests (each spawns a forced-host-device jax): excluded from
+# the default `-m "not slow"` tier-1 run; CI runs them in a dedicated job
+# (`pytest -m multidevice`).
+pytestmark = [pytest.mark.multidevice, pytest.mark.slow]
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -30,6 +35,7 @@ class TestShardedTraining:
     def test_sharded_step_matches_single_device(self):
         out = run_py("""
             import jax, jax.numpy as jnp, numpy as np, json
+            from repro.compat import make_compat_mesh, use_mesh
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.configs import get_arch
             from repro.configs.base import ShapeConfig
@@ -45,8 +51,7 @@ class TestShardedTraining:
             sol = solve_mesh(g, [MeshAxis("data", 4), MeshAxis("model", 2)],
                              beam=2000)
             plan = ShardingPlan.from_graph_solution(sol, g)
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = make_compat_mesh((4, 2), ("data", "model"))
 
             key = jax.random.PRNGKey(0)
             toks = jax.random.randint(key, (8, 32), 0, cfg.vocab)
@@ -59,7 +64,7 @@ class TestShardedTraining:
 
             # sharded
             m1 = LM(cfg, plan=plan)
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 psh = tree_shardings(plan, jax.eval_shape(m1.init, key),
                                      mesh)
                 p1 = jax.jit(m1.init, out_shardings=psh)(key)
@@ -75,6 +80,7 @@ class TestShardedTraining:
     def test_grad_step_sharded_improves_loss(self):
         out = run_py("""
             import jax, jax.numpy as jnp, json
+            from repro.compat import make_compat_mesh, use_mesh
             from repro.configs import get_arch
             from repro.configs.base import ShapeConfig
             from repro.core.builders import transformer_graph
@@ -91,12 +97,11 @@ class TestShardedTraining:
             sol = solve_mesh(g, [MeshAxis("data", 4), MeshAxis("model", 2)],
                              beam=2000)
             plan = ShardingPlan.from_graph_solution(sol, g)
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = make_compat_mesh((4, 2), ("data", "model"))
             model = LM(cfg, plan=plan)
             dcfg = DataConfig(seed=0, vocab=cfg.vocab, seq_len=32,
                               global_batch=8)
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 out = train(model, dcfg, TrainConfig(
                     steps=12, optim=AdamWConfig(lr=2e-3, warmup_steps=2)))
             h = out["history"]
@@ -111,6 +116,7 @@ class TestMoEShardMap:
     def test_sharded_moe_matches_local(self):
         out = run_py("""
             import jax, jax.numpy as jnp, json
+            from repro.compat import make_compat_mesh, use_mesh
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.configs.base import ArchConfig, MoECfg
             from repro.models.moe import init_moe, moe_ffn
@@ -127,13 +133,12 @@ class TestMoEShardMap:
             x = jax.random.normal(key, (8, 4, 16))
             y_ref, _ = moe_ffn(params, x, cfg)
 
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_compat_mesh((2, 4), ("data", "model"))
             plan = ShardingPlan(("data", "model"), {
                 "x": {"data": "batch", "model": None},
                 "moe_up": {"data": None, "model": "expert"},
                 "moe_down": {"data": None, "model": "expert"}})
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 xs = jax.device_put(x, NamedSharding(mesh, P("data")))
                 ps = {k: jax.device_put(v, NamedSharding(
                           mesh, P("model") if k.startswith("w_") else P()))
@@ -152,10 +157,10 @@ class TestPipelineParallel:
     def test_pipeline_matches_serial(self):
         out = run_py("""
             import jax, jax.numpy as jnp, numpy as np, json
+            from repro.compat import make_compat_mesh, use_mesh
             from repro.runtime.pipeline_parallel import (
                 make_stage_fn, pipeline_forward, split_stages)
-            mesh = jax.make_mesh((4,), ("stage",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_compat_mesh((4,), ("stage",))
             L, D, B = 8, 16, 12
             key = jax.random.PRNGKey(0)
             ws = jax.random.normal(key, (L, D, D)) * 0.3
@@ -182,10 +187,10 @@ class TestPipelineParallel:
     def test_pipeline_differentiable(self):
         out = run_py("""
             import jax, jax.numpy as jnp, json
+            from repro.compat import make_compat_mesh, use_mesh
             from repro.runtime.pipeline_parallel import (
                 make_stage_fn, pipeline_forward, split_stages)
-            mesh = jax.make_mesh((2,), ("stage",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_compat_mesh((2,), ("stage",))
             L, D, B = 4, 8, 4
             ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.3
             x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
@@ -209,16 +214,15 @@ class TestElasticReshard:
     def test_checkpoint_restores_onto_different_mesh(self, tmp_path):
         out = run_py(f"""
             import jax, jax.numpy as jnp, numpy as np, json
+            from repro.compat import make_compat_mesh, use_mesh
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.checkpoint import ckpt
-            mesh8 = jax.make_mesh((8,), ("data",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            mesh8 = make_compat_mesh((8,), ("data",))
             sh8 = NamedSharding(mesh8, P("data"))
             x = jax.device_put(jnp.arange(64, dtype=jnp.float32), sh8)
             ckpt.save("{tmp_path}", 1, {{"x": x}})
 
-            mesh4 = jax.make_mesh((4, 2), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh4 = make_compat_mesh((4, 2), ("data", "model"))
             sh4 = NamedSharding(mesh4, P("model"))
             out, _ = ckpt.restore("{tmp_path}", 1, {{"x": x}},
                                   sharding_fn=lambda k, a: sh4)

@@ -38,8 +38,10 @@ class TestFromSolution:
     def test_unknown_role_returns_default(self):
         sol = _sol(self.AXES, [{"x": Part("batch")}, {}])
         plan = ShardingPlan.from_solution(sol, {"x": "x"})
-        assert plan.pspec("nope", ("batch",)) is None
+        # docstring promise: fully replicated when no default is given
+        assert plan.pspec("nope", ("batch",)) == P()
         assert plan.pspec("nope", ("batch",), default=P("a")) == P("a")
+        assert not plan.has_role("nope") and plan.has_role("x")
 
     def test_cut_lands_on_first_matching_physical_axis(self):
         sol = _sol([MeshAxis("a", 2)], [{"x": Part("heads")}])

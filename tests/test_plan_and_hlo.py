@@ -34,9 +34,12 @@ class TestPlanMapping:
         assert p.pspec("x", ("batch", "d")) == P(("data", "model"))
 
     def test_unknown_role_returns_default(self):
-        # None default => shard() no-ops (P() would force replication)
-        assert self._plan().pspec("nope", ("a", "b")) is None
-        assert self._plan().pspec("nope", ("a", "b"), default=P()) == P()
+        # no default => fully replicated (shard() checks has_role first,
+        # so unknown roles still skip the sharding constraint entirely)
+        assert self._plan().pspec("nope", ("a", "b")) == P()
+        assert self._plan().pspec("nope", ("a", "b"), default=P("x")) == \
+            P("x")
+        assert not self._plan().has_role("nope")
 
     def test_cache_spec(self):
         p = self._plan()

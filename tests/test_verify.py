@@ -1,0 +1,194 @@
+"""Conformance subsystem unit tests (fast, in-process): graph executor
+semantics, fuzz invariants, predicted-byte attribution, calibration
+gates.  The full sharded conformance run is tests/test_verify_smoke.py
+(subprocess, marked slow)."""
+import numpy as np
+import pytest
+
+from repro.core.builders import mlp_graph, transformer_graph
+from repro.core.cost import graph_cost, op_cost, op_cost_detail
+from repro.core.graph import Graph
+from repro.core.solver import (MeshAxis, composed_cost, solve_mesh,
+                               solution_breakdown)
+from repro.core.tiling import (Part, REDUCED, REPLICATE, conversion_kind)
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.verify import executor, fuzz
+from repro.verify.calibration import (calibration_pass,
+                                      faithful_assignments, ABS_FLOOR,
+                                      RATIO_HI, RATIO_LO)
+from repro.verify.cells import CELLS, get_cells
+
+
+@pytest.fixture(scope="module")
+def llama_train_solution():
+    """One shared solve of the reduced llama train graph (two tests need
+    it; solving twice dominates this file's runtime otherwise)."""
+    cfg = get_arch("llama3.2-3b").reduced()
+    g = transformer_graph(cfg, ShapeConfig("t", 32, 16, "train"))
+    axes = [MeshAxis("data", 4), MeshAxis("model", 2)]
+    return g, axes, solve_mesh(g, axes)
+
+
+class TestConversionKind:
+    @pytest.mark.parametrize("src,dst,kind", [
+        (REDUCED, REPLICATE, "all-reduce"),
+        (REDUCED, Part("a"), "reduce-scatter"),
+        (Part("a"), REPLICATE, "all-gather"),
+        (Part("a"), Part("b"), "all-to-all"),
+        (REPLICATE, Part("a"), None),     # local slice
+        (Part("a"), Part("a"), None),     # identity
+        (REDUCED, REDUCED, None),
+        (Part("a"), REDUCED, None),       # infeasible, no collective
+    ])
+    def test_kinds(self, src, dst, kind):
+        assert conversion_kind(src, dst) == kind
+
+
+class TestOpCostDetail:
+    def test_records_sum_to_op_cost(self):
+        g = mlp_graph(batch=64, hidden=[32, 32, 32])
+        assign = {t: REPLICATE for t in g.tensors}
+        for op in g.ops:
+            local = {t: assign[t] for t in g.op_tensors(op)}
+            c, recs = op_cost_detail(g, op, local, 4)
+            assert c == pytest.approx(op_cost(g, op, local, 4))
+            assert sum(r["bytes"] for r in recs) == pytest.approx(c)
+
+    def test_breakdown_matches_composed_cost(self, llama_train_solution):
+        g, axes, sol = llama_train_solution
+        bd = solution_breakdown(g, axes, sol.per_axis)
+        cc = composed_cost(g, axes, sol.per_axis)
+        assert bd["total"] == pytest.approx(cc)
+        assert sum(bd["by_kind"].values()) == pytest.approx(cc)
+        assert sum(bd["by_role"].values()) == pytest.approx(cc)
+        assert sum(bd["by_axis"].values()) == pytest.approx(cc)
+
+
+class TestExecutor:
+    def _chain(self):
+        g = Graph("exec")
+        g.tensor("x", ("b", "h0"), (4, 3), kind="input")
+        g.tensor("w", ("h0", "h1"), (3, 5), kind="weight")
+        g.tensor("y", ("b", "h1"), (4, 5))
+        g.tensor("s", ("b",), (4,))
+        g.einsum("mm", "x", "w", "y")
+        g.reduce("rd", "y", "s", axis="h1")
+        return g
+
+    def test_einsum_and_reduce_semantics(self):
+        g = self._chain()
+        vals = executor.random_values(g, seed=3)
+        out = executor.execute(g, vals)
+        x, w = np.asarray(vals["x"]), np.asarray(vals["w"])
+        np.testing.assert_allclose(np.asarray(out["y"]), x @ w,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(out["s"]), (x @ w).sum(1),
+                                   rtol=1e-5)
+
+    def test_leaves_and_sinks(self):
+        g = self._chain()
+        assert set(executor.leaf_tensors(g)) == {"x", "w"}
+        assert executor.sink_tensors(g) == ["s"]
+
+    def test_ewise_broadcast_sums_inputs(self):
+        g = Graph("ew")
+        g.tensor("a", ("b", "h"), (2, 3), kind="input")
+        g.tensor("c", ("h",), (3,), kind="input")
+        g.tensor("o", ("b", "h"), (2, 3))
+        g.ewise("add", ("a", "c"), "o")
+        vals = executor.random_values(g, seed=0)
+        out = executor.execute(g, vals)
+        np.testing.assert_allclose(
+            np.asarray(out["o"]),
+            np.asarray(vals["a"]) + np.asarray(vals["c"])[None, :],
+            rtol=1e-6)
+
+    def test_custom_ops_rejected(self):
+        g = Graph("cu")
+        g.tensor("a", ("b",), (2,), kind="input")
+        g.tensor("o", ("b",), (2,))
+        g.custom("c", ("a",), "o", forms=[({"a": REPLICATE}, 0.0)])
+        with pytest.raises(NotImplementedError):
+            executor.execute(g, executor.random_values(g))
+
+
+class TestFuzzInvariants:
+    def test_fuzz_batch_holds(self):
+        r = fuzz.run_fuzz(12, seed=7)
+        assert r.ok, r.failures
+        assert r.oracle_checked >= 8  # most graphs oracle-checkable
+        assert r.permutation_checked == 12
+
+    def test_permuted_clone_is_isomorphic(self):
+        import random
+        rng = random.Random(0)
+        for seed in range(5):
+            g = fuzz.random_graph(random.Random(seed))
+            g2 = fuzz.permuted_clone(g, rng)
+            assert len(g2.tensors) == len(g.tensors)
+            assert len(g2.ops) == len(g.ops)
+            # replication must price identically on both
+            a = graph_cost(g, {t: REPLICATE for t in g.tensors}, 2)
+            b = graph_cost(g2, {t: REPLICATE for t in g2.tensors}, 2)
+            assert a == pytest.approx(b)
+
+    def test_custom_ops_not_permutable(self):
+        # custom forms are builder-specific; the fuzzer never generates
+        # them and permuted_clone rejects them loudly
+        g = Graph("bad")
+        g.tensor("a", ("x",), (4,), kind="input")
+        g.tensor("o", ("x",), (4,))
+        g.custom("c", ("a",), "o", forms=[({"a": REPLICATE}, 0.0)])
+        import random
+        with pytest.raises(NotImplementedError):
+            fuzz.permuted_clone(g, random.Random(0))
+
+
+class TestCalibrationGates:
+    def test_ratio_band(self):
+        r = calibration_pass(1e7, 2e7)
+        assert r["ok"] and r["mode"] == "ratio"
+        assert r["ratio"] == pytest.approx(2.0)
+        assert not calibration_pass(1e7, 1e7 * (RATIO_HI + 1))["ok"]
+        assert not calibration_pass(1e7, 1e7 * (RATIO_LO / 2))["ok"]
+
+    def test_floor_mode(self):
+        r = calibration_pass(0.0, 0.0)
+        assert r["ok"] and r["mode"] == "floor"
+        assert calibration_pass(ABS_FLOOR / 2,
+                                ABS_FLOOR * RATIO_HI * 0.9)["ok"]
+        assert not calibration_pass(ABS_FLOOR / 2,
+                                    ABS_FLOOR * RATIO_HI * 1.1)["ok"]
+
+    def test_faithful_projection_pins_grads_to_weights(
+            self, llama_train_solution):
+        g, axes, sol = llama_train_solution
+        fa = faithful_assignments(g, sol.per_axis)
+        for assign in fa:
+            for name, ts in g.tensors.items():
+                if ts.kind != "weight":
+                    continue
+                w = assign.get(name, REPLICATE)
+                opt = f"opt:{name}"
+                if opt in g.tensors:
+                    assert assign.get(opt, REPLICATE) == w, (name, opt)
+                d = f"d_{name}"
+                if d in g.tensors:
+                    assert assign.get(d, REPLICATE) == w, (name, d)
+        # projection still prices finitely
+        assert composed_cost(g, axes, fa) < float("inf")
+
+    def test_cells_registry(self):
+        names = {c.name for c in CELLS}
+        assert len(names) == len(CELLS)
+        families = {c.family for c in CELLS}
+        assert {"dense", "moe", "hybrid/ssd", "xlstm"} <= families
+        # >= 3 families have both a train and a decode cell
+        both = [f for f in families
+                if {"train", "decode"} <= {c.kind for c in CELLS
+                                           if c.family == f}]
+        assert len(both) >= 3
+        assert len(get_cells(["dense-train"])) == 1
+        with pytest.raises(KeyError):
+            get_cells(["nope"])

@@ -1,0 +1,54 @@
+"""End-to-end conformance smoke: `python -m repro.verify` in a
+subprocess (the CLI forces an 8-host-device jax before init, which the
+pytest process cannot).  One cheap cell per phase + a small fuzz batch;
+the full 9-cell + fuzz-200 run is the committed
+experiments/conformance/CONFORMANCE.json artifact and the CI job."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = [pytest.mark.multidevice, pytest.mark.slow]
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_verify(*args, timeout=560):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.verify", "--json", "--out", "",
+         *args],
+        capture_output=True, text=True, timeout=timeout,
+        env=dict(os.environ, PYTHONPATH=SRC))
+    assert out.returncode == 0, out.stderr[-4000:] + out.stdout[-2000:]
+    return json.loads(out.stdout)
+
+
+class TestVerifyCLI:
+    def test_cell_and_fuzz_smoke(self):
+        rep = run_verify("--cells", "dense-decode,xlstm-train",
+                         "--fuzz", "10")
+        assert rep["pass"] is True
+        cells = {c["cell"]: c for c in rep["cells"]}
+        assert set(cells) == {"dense-decode", "xlstm-train"}
+        for c in cells.values():
+            assert c["status"] == "ok"
+            assert c["calibration"]["ok"]
+            assert c["numerics"]["ok"]
+        # train cell gates the measured DP baseline
+        assert cells["xlstm-train"]["dp_baseline"]["gated"]
+        assert cells["xlstm-train"]["dp_baseline"]["ok"]
+        fz = rep["fuzz"]
+        assert fz["ok"] and fz["n"] == 10
+        assert fz["oracle_checked"] >= 6
+        assert fz["exec_checked"] >= 1   # sharded-vs-serial ran
+
+    def test_list_cells(self):
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.verify", "--list"],
+            capture_output=True, text=True, timeout=120,
+            env=dict(os.environ, PYTHONPATH=SRC))
+        assert out.returncode == 0
+        assert "dense-train" in out.stdout
+        assert "xlstm-decode" in out.stdout
