@@ -1,0 +1,217 @@
+"""Continuous-batching serving benchmark: plan-sharded vs unsharded
+decode throughput across architectures and slot counts, plus the chunked
+prefill vs seed per-token admit loop comparison.
+
+Writes ``BENCH_serve.json`` (schema in benchmarks/README.md).  Exit
+status is non-zero unless chunked prefill beats the seed per-token admit
+loop (the seed ``Server.admit`` stepped the *entire* slot pool once per
+prompt token) on a 64-token prompt by >= MIN_PREFILL_SPEEDUP for the
+full-attention archs (parallel offset-attention chunks), The recurrent
+families are measured and reported but NOT gated: they scan the
+single-token step inside one dispatch per chunk, so they only collect
+the dispatch-count and pool-width win — on the reduced CPU configs the
+per-token recurrence costs about as much as a dispatch, leaving a
+~1-2x ratio that is all host noise (see DESIGN.md §10).
+
+  PYTHONPATH=src python benchmarks/serve_bench.py            # full sweep
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke    # CI subset
+
+The sharded cells need a forced-host 4x2 mesh, so the device count is
+pinned before jax initializes (the unsharded cells simply run on one of
+the host devices).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.hostdev import force_host_devices  # noqa: E402 (pre-jax)
+
+force_host_devices(8)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.compat import make_compat_mesh  # noqa: E402
+from repro.configs.base import ShapeConfig, get_arch  # noqa: E402
+from repro.core.builders import build_graph  # noqa: E402
+from repro.core.plan import ShardingPlan  # noqa: E402
+from repro.core.solver import solve_mesh  # noqa: E402
+from repro.launch.serve import run_workload  # noqa: E402
+from repro.models.model import LM, prefill_parallel_ok  # noqa: E402
+from repro.runtime.serve import ServeConfig, Server  # noqa: E402
+from repro.verify.calibration import verify_axes  # noqa: E402
+
+ARCHS = ["qwen2-1.5b", "llama3.2-3b", "xlstm-125m"]
+SLOT_COUNTS = [4, 8]
+MESH_SHAPE = (4, 2)
+MESH_AXES = ("data", "model")
+GEN = 24
+PROMPT_LEN = 16
+MAX_LEN = 128
+CHUNK = 16
+PREFILL_PROMPT = 64          # acceptance: >=4x on a 64-token prompt
+MIN_PREFILL_SPEEDUP = 4.0
+
+
+def _warm_server(model, params, scfg, mesh):
+    """Build a throwaway server to absorb jit compiles, and a fresh one
+    wired to the warmed jits for measurement."""
+    warm = Server(model, params, scfg, mesh=mesh)
+    warm.admit(list(range(1, 4)), 0, max_new_tokens=2)
+    warm.run()
+    srv = Server(model, params, scfg, mesh=mesh).adopt_jits(warm)
+    del warm          # free its param copy + pool cache before measuring
+    return srv
+
+
+def solve_serve_plan(cfg, slots):
+    g = build_graph(cfg, ShapeConfig("serve", MAX_LEN, slots, "decode"))
+    t0 = time.time()
+    sol = solve_mesh(g, verify_axes())
+    return ShardingPlan.from_graph_solution(sol, g), time.time() - t0
+
+
+def bench_cell(arch: str, slots: int, sharded: bool, mesh) -> dict:
+    cfg = get_arch(arch).reduced()
+    rec = {"arch": arch, "slots": slots,
+           "mode": "sharded" if sharded else "unsharded"}
+    plan = None
+    if sharded:
+        plan, rec["solve_s"] = solve_serve_plan(cfg, slots)
+    model = LM(cfg, plan=plan, mesh=mesh if sharded else None)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(slots=slots, max_len=MAX_LEN,
+                       prefill_chunk=CHUNK)
+    t0 = time.time()
+    srv = _warm_server(model, params, scfg, mesh if sharded else None)
+    rec["compile_s"] = time.time() - t0
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=PROMPT_LEN).tolist()
+               for _ in range(2 * slots)]       # backfill exercised
+    m = run_workload(srv, [(0.0, p) for p in prompts], GEN)
+    for k in ("decode_tok_per_s", "prefill_tok_per_s",
+              "total_tok_per_s", "itl_p50_s", "itl_p95_s",
+              "generated_tokens", "decode_steps"):
+        rec[k] = m[k]
+    return rec
+
+
+def bench_prefill(arch: str, slots: int = 4, repeats: int = 7) -> dict:
+    """Chunked prefill vs the seed per-token admit loop (a jitted
+    pool-wide decode_step per prompt token — verbatim seed
+    Server.admit), same 64-token prompt.  Best-of-``repeats`` on both
+    sides: single-shot wall times on a small shared-CPU host are far too
+    noisy to gate on."""
+    cfg = get_arch(arch).reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, size=PREFILL_PROMPT).tolist()
+
+    # seed path
+    step = jax.jit(model.decode_step)
+    cache = model.init_cache(slots, MAX_LEN)
+    tokens = np.zeros((slots,), np.int32)
+    _, cache = step(params, cache, jnp.asarray(tokens))  # compile
+    t_seed = float("inf")
+    for _ in range(repeats):
+        cache = jax.block_until_ready(model.init_cache(slots, MAX_LEN))
+        t0 = time.monotonic()
+        for t in prompt:
+            tokens[0] = t
+            logits, cache = step(params, cache, jnp.asarray(tokens))
+        jax.block_until_ready(logits)
+        t_seed = min(t_seed, time.monotonic() - t0)
+
+    # engine chunked path (same pool size; warm first, then measure
+    # fresh admissions into the freed slot)
+    scfg = ServeConfig(slots=slots, max_len=MAX_LEN, prefill_chunk=CHUNK)
+    srv = Server(model, params, scfg)
+    srv.admit(prompt, 0, max_new_tokens=1)
+    srv.run()
+    t_chunked = float("inf")
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        srv.admit(prompt, 0, max_new_tokens=1)
+        t_chunked = min(t_chunked, time.monotonic() - t0)
+        srv.run()
+
+    return {"arch": arch, "slots": slots,
+            "prompt_len": PREFILL_PROMPT, "chunk": CHUNK,
+            "prefill_path": ("parallel" if prefill_parallel_ok(cfg)
+                             else "scan"),
+            "gated": prefill_parallel_ok(cfg),
+            "min_speedup": (MIN_PREFILL_SPEEDUP
+                            if prefill_parallel_ok(cfg) else None),
+            "seed_admit_s": t_seed, "chunked_admit_s": t_chunked,
+            "speedup": t_seed / t_chunked}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: one arch, one slot count")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    archs = ARCHS[:1] if args.smoke else ARCHS
+    slot_counts = SLOT_COUNTS[:1] if args.smoke else SLOT_COUNTS
+    mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
+
+    data = {
+        "meta": {
+            "gen": GEN, "prompt_len": PROMPT_LEN, "max_len": MAX_LEN,
+            "chunk": CHUNK, "mesh": dict(zip(MESH_AXES, MESH_SHAPE)),
+            "smoke": bool(args.smoke), "cpus": os.cpu_count(),
+            "jax": jax.__version__,
+            "min_prefill_speedup": MIN_PREFILL_SPEEDUP,
+        },
+        "cells": [], "prefill": [],
+    }
+
+    for arch in archs:
+        for slots in slot_counts:
+            for sharded in (False, True):
+                t0 = time.time()
+                rec = bench_cell(arch, slots, sharded, mesh)
+                dec = rec.get("decode_tok_per_s")
+                print(f"{arch:14s} slots={slots} "
+                      f"{rec['mode']:9s} decode="
+                      f"{dec and f'{dec:8.1f}'} tok/s "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+                data["cells"].append(rec)
+
+    ok = True
+    for arch in archs:
+        rec = bench_prefill(arch)
+        rec["pass"] = (not rec["gated"]
+                       or rec["speedup"] >= rec["min_speedup"])
+        ok &= rec["pass"]
+        gate = (f"gate {rec['min_speedup']}x" if rec["gated"]
+                else "ungated")
+        print(f"prefill {arch:14s} ({rec['prefill_path']:8s}) "
+              f"seed={rec['seed_admit_s'] * 1e3:7.1f}ms "
+              f"chunked={rec['chunked_admit_s'] * 1e3:7.1f}ms "
+              f"speedup={rec['speedup']:5.1f}x ({gate}) "
+              f"[{'ok' if rec['pass'] else 'FAIL'}]", flush=True)
+        data["prefill"].append(rec)
+
+    data["pass"] = bool(ok)
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"-> {out}  ({'PASS' if ok else 'FAIL'})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,6 @@
-"""Batched serving demo: reduced qwen2-1.5b, slot pool, jitted decode.
+"""Continuous-batching serving demo: reduced qwen2-1.5b, 4-slot pool,
+6 queued requests — chunked prefill, pooled jitted decode, slot
+backfill on retirement.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -15,14 +17,17 @@ from repro.runtime.serve import ServeConfig, Server
 cfg = get_arch("qwen2-1.5b").reduced()
 model = LM(cfg)
 params = model.init(jax.random.PRNGKey(0))
-srv = Server(model, params, ServeConfig(slots=4, max_len=128))
+srv = Server(model, params,
+             ServeConfig(slots=4, max_len=128, prefill_chunk=8))
 rng = np.random.default_rng(0)
-for s in range(4):
-    srv.admit(rng.integers(0, cfg.vocab, size=6).tolist(), s)
+rids = [srv.submit(rng.integers(0, cfg.vocab, size=6).tolist(),
+                   max_new_tokens=24)
+        for _ in range(6)]
 t0 = time.monotonic()
-outs = srv.generate(24)
+outs = srv.run()
 dt = time.monotonic() - t0
-print(f"decoded 24 tokens x 4 slots in {dt:.2f}s "
-      f"({4*24/dt:.0f} tok/s on CPU)")
-for s, o in enumerate(outs):
-    print(f"slot {s}: {o[:10]}")
+n = sum(len(v) for v in outs.values())
+print(f"decoded {n} tokens across {len(rids)} requests "
+      f"(4 slots) in {dt:.2f}s ({n / dt:.0f} tok/s on CPU)")
+for rid in rids:
+    print(f"req {rid}: {outs[rid][:10]}... [{srv.finished[rid]}]")

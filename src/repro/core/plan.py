@@ -16,6 +16,11 @@ from jax.sharding import PartitionSpec as P
 from .solver import TilingSolution
 from .tiling import Part, REPLICATE
 
+# roles carried by the decode-time cache/state pytree (models/sharding.py
+# CACHE_RULES maps the cache leaves onto them); the serving engine shards
+# the pool cache through these
+CACHE_ROLES = ("kv_cache", "ssm_state")
+
 
 @dataclasses.dataclass
 class ShardingPlan:
@@ -80,6 +85,30 @@ class ShardingPlan:
         while spec and spec[-1] is None:
             spec.pop()
         return P(*spec)
+
+    def for_pool(self, n_slots: int,
+                 axis_sizes: Dict[str, int]) -> "ShardingPlan":
+        """Serving variant of the plan: the pool's slot count replaces
+        the solved shape's batch size, and jax requires committed
+        in_shardings to divide evenly — so drop ``batch`` cuts (on cache,
+        activation and logits roles alike) on mesh axes that no longer
+        divide ``n_slots``.  Axes are considered in mesh order so stacked
+        batch cuts keep the largest dividing prefix; every non-batch cut
+        survives unchanged."""
+        rc: Dict[str, Dict[str, Optional[str]]] = {}
+        for role, cuts in self.role_cuts.items():
+            c = dict(cuts)
+            prod = 1
+            for ax in self.mesh_axis_names:
+                if c.get(ax) != "batch":
+                    continue
+                size = axis_sizes.get(ax, 1)
+                if n_slots % (prod * size):
+                    c[ax] = None
+                else:
+                    prod *= size
+            rc[role] = c
+        return ShardingPlan(self.mesh_axis_names, rc)
 
     def with_override(self, role: str,
                       cuts: Dict[str, Optional[str]]) -> "ShardingPlan":

@@ -1,0 +1,18 @@
+"""Force the XLA host-platform device count — stdlib only, and it MUST
+run before jax initializes (verify CLI, serving harness and serve bench
+all need a multi-device host mesh on CPU)."""
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int = 8) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS
+    unless a count is already pinned there (an explicit operator setting
+    wins)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FLAG.lstrip("-") in flags:
+        return
+    os.environ["XLA_FLAGS"] = f"{flags} {_FLAG}={n}".strip()

@@ -1,55 +1,267 @@
-"""Serving launcher: loads (or inits) a model, admits a batch of prompts
-into the slot pool, generates with the jitted decode step.
+"""Serving benchmark harness: drives the continuous-batching engine
+(runtime/serve.py) over a synthetic workload and reports prefill/decode
+throughput plus per-token latency percentiles.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --slots 4 --gen 16
+  # plan-sharded pool on a forced-host mesh (solves the decode tiling):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
+      --slots 4 --gen 16 --mesh 4x2 --plan auto
+  # open-loop Poisson arrivals at 2 req/s:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --requests 12 --arrivals poisson --rate 2.0
+
+Only stdlib at module level: --mesh forces the host device count via
+XLA_FLAGS, which must be set before jax initializes.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import sys
 import time
 
-import jax
-import numpy as np
 
-from ..configs.base import get_arch
-from ..models.model import LM
-from ..runtime.serve import ServeConfig, Server
-
-
-def main():
-    ap = argparse.ArgumentParser()
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.serve")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--gen", type=int, default=16,
+                    help="max new tokens per request")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests (default: one per slot)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk size")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="e.g. 4x2 — forces host devices and builds a "
+                         "(data, model) mesh")
+    ap.add_argument("--plan", default=None, choices=[None, "auto"],
+                    help="'auto' solves the decode tiling for the mesh "
+                         "and shards params+cache with it")
+    ap.add_argument("--arrivals", default="batch",
+                    choices=["batch", "poisson"])
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="poisson arrival rate, requests/s")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--min-decode-tput", type=float, default=None,
+                    help="exit non-zero unless decode tok/s exceeds this "
+                         "(CI smoke gate)")
+    return ap
+
+
+def _percentile(xs, q):
+    if not xs:
+        return None
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+    return xs[i]
+
+
+def run_workload(srv, arrivals, gen):
+    """Drive the engine over (t_arrival, prompt) pairs; returns the
+    metrics record.  Admission and decode are timed separately so the
+    prefill/decode split is honest."""
+    t0 = time.monotonic()
+    pending = sorted(arrivals, key=lambda a: a[0])
+    submit_t = {}
+    first_tok_t = {}
+    tok_times = {}
+    prefill_s = decode_s = 0.0
+    prompt_toks = decode_toks = 0
+    n_decode_steps = 0
+
+    def clock():
+        return time.monotonic() - t0
+
+    while pending or srv.waiting or srv.active.any():
+        now = clock()
+        while pending and pending[0][0] <= now:
+            _, prompt = pending.pop(0)
+            rid = srv.submit(prompt, max_new_tokens=gen)
+            submit_t[rid] = clock()
+            tok_times[rid] = []
+        if not (srv.waiting or srv.active.any()):
+            time.sleep(min(0.001, max(0.0, pending[0][0] - clock())))
+            continue
+
+        ta = time.monotonic()
+        admit_evs = srv.admit_waiting()
+        tb = time.monotonic()
+        dec_evs = srv.decode_once()
+        tc = time.monotonic()
+        if admit_evs:
+            prefill_s += tb - ta
+        if dec_evs:
+            decode_s += tc - tb
+            n_decode_steps += 1
+        # prefill-produced tokens are stamped at the end of admission,
+        # not after the decode step that happened to follow them —
+        # otherwise every TTFT carries one spurious pool decode
+        for evs, t, from_decode in ((admit_evs, tb - t0, False),
+                                    (dec_evs, tc - t0, True)):
+            for kind, rid, val in evs:
+                if kind == "admit":
+                    prompt_toks += int(srv.prompt_len[val])
+                elif kind == "token":
+                    first_tok_t.setdefault(rid, t)
+                    tok_times[rid].append(t)
+                    if from_decode:
+                        decode_toks += 1
+
+    total = clock()
+    itls = []
+    for rid, ts in tok_times.items():
+        itls += [b - a for a, b in zip(ts, ts[1:])]
+    ttfts = [first_tok_t[r] - submit_t[r] for r in first_tok_t]
+    gen_toks = sum(len(ts) for ts in tok_times.values())
+    return {
+        "requests": len(tok_times),
+        "generated_tokens": gen_toks,
+        "prompt_tokens": prompt_toks,
+        "wall_s": total,
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "decode_steps": n_decode_steps,
+        "prefill_tok_per_s": (prompt_toks / prefill_s
+                              if prefill_s else None),
+        "decode_tok_per_s": (decode_toks / decode_s
+                             if decode_s else None),
+        "total_tok_per_s": gen_toks / total if total else None,
+        "ttft_p50_s": _percentile(ttfts, 0.50),
+        "ttft_p95_s": _percentile(ttfts, 0.95),
+        "itl_p50_s": _percentile(itls, 0.50),
+        "itl_p95_s": _percentile(itls, 0.95),
+    }
+
+
+def main(argv=None) -> int:
+    ap = build_argparser()
+    args = ap.parse_args(argv)
+    mesh_shape = None
+    if args.plan and not args.mesh:
+        ap.error("--plan requires --mesh (the plan shards the pool "
+                 "across a mesh)")
+    if args.mesh:
+        mesh_shape = tuple(int(s) for s in args.mesh.lower().split("x"))
+        n_dev = 1
+        for s in mesh_shape:
+            n_dev *= s
+        from ..hostdev import force_host_devices
+        force_host_devices(n_dev)
+
+    import jax
+    import numpy as np
+
+    from ..configs.base import ShapeConfig, get_arch
+    from ..models.model import LM
+    from ..runtime.serve import ServeConfig, Server
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    model = LM(cfg)
+
+    plan = mesh = None
+    if mesh_shape:
+        from ..compat import make_compat_mesh
+        axis_names = ("data", "model")[:len(mesh_shape)]
+        mesh = make_compat_mesh(mesh_shape, axis_names)
+        if args.plan == "auto":
+            # the same cached solve path the dry-run and conformance
+            # cells use (launch/compile.py)
+            from ..core.solver import MeshAxis
+            from .compile import plan_from_record, solve_cell_plan
+            from .mesh import ICI_BW, ICI_LINKS_PER_AXIS
+            bw = ICI_BW * ICI_LINKS_PER_AXIS
+            axes = [MeshAxis(n, s, bw)
+                    for n, s in zip(axis_names, mesh_shape)]
+            tag = "r" if args.reduced else ""
+            shape = ShapeConfig(
+                f"serve{tag}{args.slots}x{args.max_len}",
+                args.max_len, args.slots, "decode")
+            t0 = time.time()
+            rec = solve_cell_plan(cfg, shape, axes,
+                                  mesh_name=f"host{args.mesh}")
+            plan = plan_from_record(rec)
+            print(f"decode plan ({time.time() - t0:.1f}s, cached solve "
+                  f"{rec['solve_time']:.1f}s):")
+            print(plan.describe())
+
+    model = LM(cfg, plan=plan, mesh=mesh)
     params = model.init(jax.random.PRNGKey(0))
-    srv = Server(model, params, ServeConfig(args.slots, args.max_len))
+    scfg = ServeConfig(slots=args.slots, max_len=args.max_len,
+                       prefill_chunk=args.chunk,
+                       temperature=args.temperature, top_k=args.top_k,
+                       seed=args.seed)
+    srv = Server(model, params, scfg, mesh=mesh)
 
-    rng = np.random.default_rng(0)
-    for s in range(args.slots):
-        prompt = rng.integers(0, cfg.vocab, size=8).tolist()
-        srv.admit(prompt, s)
-    t0 = time.monotonic()
-    outs = srv.generate(args.gen)
-    dt = time.monotonic() - t0
-    tput = args.slots * args.gen / dt
-    print(f"generated {args.gen} tokens x {args.slots} slots "
-          f"in {dt:.2f}s ({tput_fmt(tput)})")
-    for s, o in enumerate(outs):
-        print(f"slot {s}: {o[:12]}...")
+    rng = np.random.default_rng(args.seed)
+    n_req = args.requests or args.slots
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=args.prompt_len).tolist()
+               for _ in range(n_req)]
+    if args.arrivals == "poisson":
+        t_arr = np.cumsum(rng.exponential(1.0 / args.rate, size=n_req))
+    else:
+        t_arr = np.zeros(n_req)
 
+    # warm the jits (compile time must not pollute the measurement)
+    warm = Server(model, params, scfg, mesh=mesh)
+    warm.admit(prompts[0], 0, max_new_tokens=2)
+    warm.run()
+    srv.adopt_jits(warm)
+    del warm          # free its param copy + pool cache before measuring
 
-def tput_fmt(t):
-    return f"{t:.1f} tok/s"
+    rec = run_workload(srv, list(zip(t_arr, prompts)), args.gen)
+    rec["meta"] = {
+        "arch": cfg.name, "reduced": args.reduced, "slots": args.slots,
+        "max_len": args.max_len, "gen": args.gen,
+        "prompt_len": args.prompt_len, "chunk": args.chunk,
+        "mesh": args.mesh, "plan": args.plan,
+        "arrivals": args.arrivals,
+        "rate": args.rate if args.arrivals == "poisson" else None,
+        "n_devices": jax.device_count(),
+    }
+
+    def fmt(v, unit=""):
+        return "n/a" if v is None else f"{v:,.1f}{unit}"
+
+    print(f"{rec['requests']} requests, "
+          f"{rec['generated_tokens']} tokens generated, "
+          f"{rec['prompt_tokens']} prompt tokens in "
+          f"{rec['wall_s']:.2f}s")
+    print(f"  prefill  {fmt(rec['prefill_tok_per_s'], ' tok/s')}  "
+          f"({rec['prefill_s']:.2f}s)")
+    print(f"  decode   {fmt(rec['decode_tok_per_s'], ' tok/s')}  "
+          f"({rec['decode_s']:.2f}s, {rec['decode_steps']} steps)")
+    p50 = rec["itl_p50_s"]
+    p95 = rec["itl_p95_s"]
+    print(f"  latency  per-token p50 "
+          f"{fmt(p50 and p50 * 1e3, ' ms')}, p95 "
+          f"{fmt(p95 and p95 * 1e3, ' ms')}; ttft p50 "
+          f"{fmt(rec['ttft_p50_s'] and rec['ttft_p50_s'] * 1e3, ' ms')}")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"metrics -> {args.json_out}")
+
+    if args.min_decode_tput is not None:
+        tput = rec["decode_tok_per_s"] or 0.0
+        if tput < args.min_decode_tput:
+            print(f"FAIL: decode throughput {tput} < "
+                  f"{args.min_decode_tput}")
+            return 1
+        print(f"decode throughput gate ok "
+              f"({tput:.1f} >= {args.min_decode_tput})")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from . import attention as attention_mod
-from .attention import attend_cache, attention
+from .attention import attend_cache, attention, flash_attention_xla
 from .common import (dense_init, embed_init, rms_norm, rope, shard,
                      softmax_cross_entropy)
 from .mamba import (init_mamba, init_mamba_state, mamba_forward, mamba_step)
@@ -26,6 +26,45 @@ from .xlstm import (init_mlstm, init_mlstm_state, init_slstm,
                     slstm_forward, slstm_step)
 
 PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# per-slot cache surgery (used by the serving engine, runtime/serve.py)
+# ---------------------------------------------------------------------------
+# Cache pytrees have exactly one rank-1 [B] leaf ("pos"); every other
+# leaf carries a leading layer-stack axis with batch at axis 1 (see
+# init_cache).  These helpers slice / merge / reset one slot's row so
+# admission and chunked prefill touch only that request's state.
+
+def _cache_batch_axis(path) -> int:
+    last = path[-1]
+    key = getattr(last, "key", getattr(last, "idx", last))
+    return 0 if str(key) == "pos" else 1
+
+
+def slot_slice(cache: PyTree, slot) -> PyTree:
+    """Batch-1 view of one slot's cache row (batch axis kept)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a: jax.lax.dynamic_slice_in_dim(
+            a, slot, 1, _cache_batch_axis(p)), cache)
+
+
+def slot_merge(cache: PyTree, sub: PyTree, slot) -> PyTree:
+    """Write a batch-1 cache back into ``slot``'s row of the pool."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a, b: jax.lax.dynamic_update_slice_in_dim(
+            a, b.astype(a.dtype), slot, _cache_batch_axis(p)), cache, sub)
+
+
+def prefill_parallel_ok(cfg: ArchConfig) -> bool:
+    """Whether LM.prefill_chunk can run a chunk in parallel (offset
+    flash attention against a linear KV cache): the decode dense branch
+    with no ring-buffer SWA cache.  Recurrent families (ssm / xlstm /
+    hybrid) scan the single-token step instead.  The one source of
+    truth — benchmarks pick their per-path gates through this."""
+    return (not (cfg.family == "hybrid" and cfg.attn_every)
+            and cfg.xlstm is None and cfg.family != "ssm"
+            and cfg.swa_window is None)
 
 
 # ---------------------------------------------------------------------------
@@ -453,3 +492,126 @@ class LM:
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
         new_cache["pos"] = pos + 1
         return self._head(params, x), new_cache
+
+    # -- serving: per-slot reset + chunked prefill -------------------------
+    def reset_slot(self, cache, slot) -> PyTree:
+        """Zero one slot's cache row (KV / recurrent state / pos).
+        Admission into a freed slot must never see the previous
+        request's state (stale-cache leakage)."""
+        sub = jax.tree_util.tree_map(jnp.zeros_like,
+                                     slot_slice(cache, slot))
+        return slot_merge(cache, sub, slot)
+
+    def prefill_chunk(self, params, cache, tokens, slot, n_valid,
+                      impl: str = "auto") -> Tuple[jnp.ndarray, PyTree]:
+        """Chunked prefill for ONE slot: consume ``tokens`` [C] int32
+        (first ``n_valid`` real, rest padding) starting at the slot's
+        current cache position.  Returns (f32 logits [V] for the last
+        valid token, new pool cache).
+
+        Full-attention families with a linear KV cache run the whole
+        chunk in parallel (flash attention against the cache with a
+        causal position offset); recurrent families (ssm / xlstm /
+        hybrid) and ring-buffer SWA caches scan ``decode_step`` over the
+        chunk.  Either way one chunk is ONE device dispatch touching ONE
+        slot — the seed admit loop paid a pool-wide dispatch per prompt
+        token.
+
+        ``impl``: "auto" picks per family; "scan" forces the sequential
+        path (bit-identical to the decode_step loop — the parallel path
+        re-associates the softmax under bf16); "parallel" forces the
+        offset-attention path (full-attention linear caches only)."""
+        cfg = self.cfg
+        sub = slot_slice(cache, slot)
+        parallel_ok = prefill_parallel_ok(cfg)
+        if impl == "parallel" and not parallel_ok:
+            raise ValueError(
+                f"parallel prefill unsupported for {cfg.name} "
+                "(recurrent state or ring-buffer SWA cache)")
+        if parallel_ok and impl != "scan":
+            logits, sub = self._prefill_chunk_attn(params, sub, tokens,
+                                                   n_valid)
+        else:
+            logits, sub = self._prefill_chunk_scan(params, sub, tokens,
+                                                   n_valid)
+        return logits, slot_merge(cache, sub, slot)
+
+    def _prefill_chunk_scan(self, params, sub, tokens, n_valid):
+        """Fallback chunk prefill: scan the single-token decode step over
+        the chunk (batch-1 cache), masking the padded tail."""
+        c = tokens.shape[0]
+
+        def body(carry, inp):
+            sub, lg = carry
+            tok, i = inp
+            lg2, sub2 = self.decode_step(params, sub, tok[None])
+            keep = i < n_valid
+            sub = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(keep, a, b), sub2, sub)
+            lg = jnp.where(i == n_valid - 1,
+                           lg2[0].astype(jnp.float32), lg)
+            return (sub, lg), None
+
+        lg0 = jnp.zeros((self.cfg.vocab,), jnp.float32)
+        (sub, logits), _ = jax.lax.scan(body, (sub, lg0),
+                                        (tokens, jnp.arange(c)))
+        return logits, sub
+
+    def _attn_prefill(self, p, x, kv_cache, positions, cfg):
+        """x: [1, C, D]; kv_cache: {"k","v"} [1, S, KV, hd] (one layer).
+        Writes the chunk's K/V at absolute ``positions`` and attends the
+        chunk's queries against the whole cache with a causal offset.
+        Padded rows write past the valid region (dropped when out of
+        range; otherwise overwritten by later decode writes at the same
+        index, and never attended thanks to the length mask)."""
+        b, c, d = x.shape
+        hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        q = x @ p["wq"]
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = rope(q.reshape(b, c, h, hd), positions, cfg.rope_theta)
+        k = rope(k.reshape(b, c, kvh, hd), positions, cfg.rope_theta)
+        v = v.reshape(b, c, kvh, hd)
+        idx = positions[0]
+        kc = kv_cache["k"].at[:, idx].set(k.astype(jnp.bfloat16),
+                                          mode="drop")
+        vc = kv_cache["v"].at[:, idx].set(v.astype(jnp.bfloat16),
+                                          mode="drop")
+        o = flash_attention_xla(q, kc, vc, causal=True,
+                                q_offset=positions[0, 0])
+        return o.reshape(b, c, h * hd) @ p["wo"], {"k": kc, "v": vc}
+
+    def _prefill_chunk_attn(self, params, sub, tokens, n_valid):
+        """Parallel chunk prefill for the full-attention families (the
+        decode_step dense branch, seq-form, with offset attention)."""
+        cfg = self.cfg
+        pos0 = sub["pos"][0]
+        x = params["embed"][tokens][None]          # [1, C, D]
+        x = shard(x, self.plan, "x", ("batch", "seq", "d_model"))
+        c = tokens.shape[0]
+        positions = (pos0 + jnp.arange(c))[None, :]
+
+        def body(x, inp):
+            p, kvi = inp
+            h, kv_new = self._attn_prefill(
+                p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), kvi,
+                positions, cfg)
+            x = x + h
+            xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                y, _ = moe_ffn(p["moe"], xn, cfg, self.plan)
+            else:
+                y = _mlp_forward(p["mlp"], xn)
+            return x + y, kv_new
+
+        x, kv_new = self._fold(body, x, (params["layers"], sub["kv"]))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = self._head(params, x)[0]          # [C, V]
+        last = jax.lax.dynamic_index_in_dim(logits, n_valid - 1, 0,
+                                            keepdims=False)
+        new_sub = dict(sub)
+        new_sub["kv"] = kv_new
+        new_sub["pos"] = sub["pos"] + n_valid
+        return last.astype(jnp.float32), new_sub

@@ -1,62 +1,348 @@
-"""Batched serving loop: continuous-batching-style decode with a fixed
-slot pool; prefill fills a slot's KV cache, decode steps run jitted over
-the whole pool."""
+"""Plan-sharded continuous-batching serving engine.
+
+A fixed pool of ``slots`` requests decodes together in one jitted
+pool-wide step; admission and eviction happen *between* decode steps:
+
+- **chunked prefill**: admitting a request resets its slot and fills the
+  KV / recurrent cache in O(prompt_len / prefill_chunk) device dispatches
+  (``LM.prefill_chunk``), touching only that slot's row.  The first
+  output token is sampled from the prefill logits.
+- **slot scheduler**: per-slot position / output-count tracking, EOS and
+  max-new-token retirement, a hard halt when the cache is full (pos ==
+  max_len — the seed server silently indexed past the cache end), and a
+  waiting queue that backfills freed slots.
+- **isolation**: each slot attends only its own cache row (per-slot
+  length masking in ``attend_cache``), positions are per-slot, and a
+  freed slot is zeroed before reuse — co-resident requests cannot leak
+  into each other, and a recycled slot behaves like a fresh server.
+- **batched sampling**: greedy / temperature / top-k over the whole pool
+  inside the jitted decode step (``sample_tokens``).
+- **plan sharding**: with a solver ``ShardingPlan`` and a mesh, params
+  and the pool cache are placed per the plan (``ShardingPlan.for_pool``
+  drops batch cuts that stop dividing the slot count; cache roles ride
+  models/sharding.py CACHE_RULES) and the decode/prefill jits donate the
+  cache buffer so the pool state is updated in place.
+"""
 from __future__ import annotations
 
+import collections
+import contextlib
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import use_mesh
 from ..models.model import LM
 
 PyTree = Any
+
+# sentinel budget for "generate until EOS / cache full"
+_UNBOUNDED = 1 << 60
 
 
 @dataclasses.dataclass
 class ServeConfig:
     slots: int = 8
     max_len: int = 256
+    prefill_chunk: int = 16
+    # "auto" | "scan" | "parallel" — see LM.prefill_chunk
+    prefill_impl: str = "auto"
+    eos_id: Optional[int] = None
+    temperature: float = 0.0       # 0 -> greedy
+    top_k: int = 0                 # 0 -> full distribution
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: Optional[int] = None
+
+
+def sample_tokens(logits, key, temperature: float = 0.0, top_k: int = 0):
+    """Batched sampling over the pool: logits [B, V] -> tokens [B].
+    Greedy when temperature == 0; otherwise temperature softmax,
+    restricted to the top_k logits when top_k > 0.  temperature/top_k
+    are compile-time constants (the engine jits one sampler per config).
+
+    ``key`` is a single PRNG key shared by the batch, or a [B] stack of
+    per-row keys — the engine passes per-slot keys derived from
+    (request id, token index) so a request's sampled stream does not
+    depend on what else is resident in the pool."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    scaled = logits / temperature
+    per_row = jnp.asarray(key).ndim == 2
+    if top_k:
+        vals, idx = jax.lax.top_k(scaled, top_k)
+        if per_row:
+            s = jax.vmap(jax.random.categorical)(key, vals)
+        else:
+            s = jax.random.categorical(key, vals, axis=-1)
+        return jnp.take_along_axis(
+            idx, s[..., None], -1)[..., 0].astype(jnp.int32)
+    if per_row:
+        return jax.vmap(jax.random.categorical)(key,
+                                                scaled).astype(jnp.int32)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
 class Server:
-    def __init__(self, model: LM, params: PyTree, scfg: ServeConfig):
-        self.model = model
-        self.params = params
+    """Continuous-batching slot-pool server (see module docstring).
+
+    Scheduler API:
+      submit(prompt, max_new_tokens) -> rid     enqueue a request
+      step() -> events                          admissions + one decode
+      run(max_steps) -> {rid: tokens}           drive until drained
+    Lower-level pieces (used by the benchmark harness and tests):
+      admit_waiting() / decode_once(forced_tokens)
+      admit(prompt, slot, ...) -> rid           direct admission
+      generate(n) -> per-slot outputs           seed-compat demo API
+    """
+
+    def __init__(self, model: LM, params: PyTree, scfg: ServeConfig,
+                 mesh=None):
         self.scfg = scfg
-        self.cache = model.init_cache(scfg.slots, scfg.max_len)
-        self._decode = jax.jit(model.decode_step)
-        self.tokens = np.zeros((scfg.slots,), np.int32)
-        self.active = np.zeros((scfg.slots,), bool)
-        self.outputs: List[List[int]] = [[] for _ in range(scfg.slots)]
+        self.mesh = mesh if mesh is not None else model.mesh
+        self.plan = model.plan
+        n = scfg.slots
+        self.sharded = self.plan is not None and self.mesh is not None
+        if self.sharded:
+            sizes = dict(zip(self.mesh.axis_names,
+                             self.mesh.devices.shape))
+            self.plan = self.plan.for_pool(n, sizes)
+        self.model = dataclasses.replace(model, plan=self.plan,
+                                         mesh=self.mesh)
 
-    def admit(self, prompt: List[int], slot: int) -> None:
-        """Prefill a slot by stepping the prompt (simple loop prefill;
-        the chunked prefill path is exercised by examples/serve.py)."""
-        # reset this slot's cache position by zeroing via mask trick:
-        # simplest correct approach for the demo server: rebuild pool
-        # cache when admitting (slots are admitted before decode starts).
-        for t in prompt:
-            self.tokens[slot] = t
-            logits, self.cache = self._decode(
-                self.params, self.cache,
-                jnp.asarray(self.tokens))
+        # host-side scheduler state
+        self.active = np.zeros((n,), bool)
+        self.next_tok = np.zeros((n,), np.int32)
+        self.pos = np.zeros((n,), np.int64)         # mirror of cache pos
+        self.n_out = np.zeros((n,), np.int64)
+        self.budget = np.full((n,), _UNBOUNDED, np.int64)
+        self.prompt_len = np.zeros((n,), np.int64)
+        self.slot_rid = np.full((n,), -1, np.int64)
+        self.outputs: Dict[int, List[int]] = {}
+        self.finished: Dict[int, str] = {}          # rid -> retire reason
+        self.waiting: collections.deque = collections.deque()
+        self.prefill_logits = np.zeros((n, model.cfg.vocab), np.float32)
+        self.last_logits: Any = None      # device array, see decode_once
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+        t, k = scfg.temperature, scfg.top_k
+        base_key = self._key
+
+        def slot_key(rid, count):
+            # per-(request, token-index) stream: sampling is invariant
+            # to whatever else is resident in the pool
+            return jax.random.fold_in(
+                jax.random.fold_in(base_key, jnp.maximum(rid, 0)), count)
+
+        def decode_fn(params, cache, tokens, rids, counts):
+            logits, cache = self.model.decode_step(params, cache, tokens)
+            keys = jax.vmap(slot_key)(rids, counts)
+            toks = sample_tokens(logits, keys, t, k)
+            return toks, logits.astype(jnp.float32), cache
+
+        def prefill_fn(params, cache, tokens, slot, n_valid):
+            return self.model.prefill_chunk(params, cache, tokens, slot,
+                                            n_valid,
+                                            impl=scfg.prefill_impl)
+
+        with self._ctx():
+            if self.sharded:
+                from ..models.sharding import CACHE_RULES, tree_shardings
+                params = jax.device_put(
+                    params, tree_shardings(self.plan, params, self.mesh))
+                cache = self.model.init_cache(n, scfg.max_len)
+                cache = jax.device_put(
+                    cache, tree_shardings(self.plan, cache, self.mesh,
+                                          rules=CACHE_RULES))
+            else:
+                cache = self.model.init_cache(n, scfg.max_len)
+            self.params = params
+            self.cache = cache
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
+        self._reset = jax.jit(self.model.reset_slot, donate_argnums=(0,))
+        self._sample1 = jax.jit(
+            lambda lg, rid: sample_tokens(lg[None], slot_key(rid, 0),
+                                          t, k)[0])
+
+    def adopt_jits(self, other: "Server") -> "Server":
+        """Take another (configuration-identical) server's compiled
+        jits, so benchmark harnesses can warm up on a throwaway pool and
+        measure a fresh one without paying compiles in the timed window.
+        The single place that knows which jits a Server carries."""
+        self._decode = other._decode
+        self._prefill = other._prefill
+        self._reset = other._reset
+        self._sample1 = other._sample1
+        return self
+
+    def _ctx(self):
+        return use_mesh(self.mesh) if self.mesh is not None \
+            else contextlib.nullcontext()
+
+    # -- request intake ---------------------------------------------------
+    def submit(self, prompt: Sequence[int],
+               max_new_tokens: Optional[int] = None) -> int:
+        """Enqueue a request; it is admitted by a later step() when a
+        slot frees up."""
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.scfg.max_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens does not fit the "
+                f"max_len={self.scfg.max_len} cache")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.waiting.append(Request(rid, list(prompt), max_new_tokens))
+        return rid
+
+    def admit(self, prompt: Sequence[int], slot: int,
+              max_new_tokens: Optional[int] = None,
+              method: str = "chunked") -> int:
+        """Admit a request directly into ``slot`` (must be free).
+        ``method``: "chunked" (prefill_chunk-sized pieces) or
+        "tokenwise" (chunk size 1 — the per-token reference path)."""
+        if self.active[slot]:
+            raise ValueError(f"slot {slot} is busy")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._admit(Request(rid, list(prompt), max_new_tokens), slot,
+                    method)
+        return rid
+
+    def _admit(self, req: Request, slot: int,
+               method: str = "chunked") -> List[Tuple]:
+        scfg = self.scfg
+        if not 1 <= len(req.prompt) <= scfg.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens does not fit the "
+                f"max_len={scfg.max_len} cache")
+        c = scfg.prefill_chunk if method == "chunked" else 1
+        prompt = np.asarray(req.prompt, np.int32)
+        with self._ctx():
+            self.cache = self._reset(self.cache, slot)
+            logits = None
+            for i in range(0, len(prompt), c):
+                chunk = prompt[i:i + c]
+                nv = len(chunk)
+                if nv < c:
+                    chunk = np.pad(chunk, (0, c - nv))
+                logits, self.cache = self._prefill(
+                    self.params, self.cache, jnp.asarray(chunk),
+                    slot, nv)
+            tok = int(self._sample1(logits, req.rid))
+        self.prefill_logits[slot] = np.asarray(logits)
         self.active[slot] = True
-        self.outputs[slot] = []
+        self.slot_rid[slot] = req.rid
+        self.prompt_len[slot] = len(prompt)
+        self.pos[slot] = len(prompt)
+        self.n_out[slot] = 0
+        self.budget[slot] = (req.max_new_tokens
+                             if req.max_new_tokens is not None
+                             else _UNBOUNDED)
+        self.outputs[req.rid] = []
+        events = [("admit", req.rid, slot)]
+        events += self._append(slot, tok)
+        return events
 
-    def step(self, greedy: bool = True) -> np.ndarray:
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.tokens))
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+    # -- slot bookkeeping -------------------------------------------------
+    def _append(self, slot: int, tok: int) -> List[Tuple]:
+        rid = int(self.slot_rid[slot])
+        self.outputs[rid].append(tok)
+        self.n_out[slot] += 1
+        self.next_tok[slot] = tok
+        events: List[Tuple] = [("token", rid, tok)]
+        scfg = self.scfg
+        if scfg.eos_id is not None and tok == scfg.eos_id:
+            events.append(self._retire(slot, "eos"))
+        elif self.n_out[slot] >= self.budget[slot]:
+            events.append(self._retire(slot, "length"))
+        elif self.pos[slot] >= scfg.max_len:
+            # cache full: feeding one more token would index past the
+            # cache end (the seed server's silent-overflow bug)
+            events.append(self._retire(slot, "max_len"))
+        return events
+
+    def _retire(self, slot: int, reason: str) -> Tuple:
+        rid = int(self.slot_rid[slot])
+        self.active[slot] = False
+        self.slot_rid[slot] = -1
+        self.finished[rid] = reason
+        return ("retire", rid, reason)
+
+    # -- the serving loop -------------------------------------------------
+    def admit_waiting(self) -> List[Tuple]:
+        """Backfill free slots from the waiting queue."""
+        events: List[Tuple] = []
+        for slot in range(self.scfg.slots):
+            if not self.waiting:
+                break
+            if not self.active[slot]:
+                events += self._admit(self.waiting.popleft(), slot)
+        return events
+
+    def decode_once(self, forced_tokens: Optional[np.ndarray] = None
+                    ) -> List[Tuple]:
+        """One pool-wide decode step: feed each active slot's next token
+        (or ``forced_tokens`` — teacher forcing, used by the conformance
+        cell), sample, append, retire.  No-op when nothing is active."""
+        if not self.active.any():
+            return []
+        feed = (self.next_tok if forced_tokens is None
+                else np.asarray(forced_tokens, np.int32))
+        with self._ctx():
+            toks, logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(feed),
+                jnp.asarray(self.slot_rid, jnp.int32),
+                jnp.asarray(self.n_out, jnp.int32))
+            toks = np.asarray(toks)
+        # device array, materialized lazily — only diagnostic consumers
+        # (tests, the conformance cell) pay the [slots, vocab] transfer
+        self.last_logits = logits
+        self.pos += 1          # decode_step advances every row's pos
+        events: List[Tuple] = []
+        for slot in np.nonzero(self.active)[0]:
+            events += self._append(int(slot), int(toks[slot]))
+        return events
+
+    def step(self) -> List[Tuple]:
+        """One scheduler iteration: admissions, then one decode step.
+        Returns event tuples ("admit"|"token"|"retire", rid, value)."""
+        return self.admit_waiting() + self.decode_once()
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        """Drive until the queue and the pool drain (or max_steps)."""
+        steps = 0
+        while self.waiting or self.active.any():
+            if max_steps is not None and steps >= max_steps:
+                break
+            self.step()
+            steps += 1
+        return {rid: list(toks) for rid, toks in self.outputs.items()}
+
+    # -- seed-compat demo API ---------------------------------------------
+    def generate(self, n_tokens: int) -> List[List[int]]:
+        """Decode until every currently-active slot has ``n_tokens``
+        outputs (counting the prefill-sampled first token), then return
+        the per-slot output lists.  Compat shim for the seed demo API —
+        production drivers use submit()/run()."""
+        rids = [int(self.slot_rid[s]) if self.active[s] else None
+                for s in range(self.scfg.slots)]
         for s in range(self.scfg.slots):
             if self.active[s]:
-                self.outputs[s].append(int(nxt[s]))
-                self.tokens[s] = nxt[s]
-        return nxt
-
-    def generate(self, n_tokens: int) -> List[List[int]]:
-        for _ in range(n_tokens):
-            self.step()
-        return self.outputs
+                self.budget[s] = min(self.budget[s], n_tokens)
+        while any(self.active[s] for s in range(self.scfg.slots)
+                  if rids[s] is not None):
+            self.decode_once()
+        return [list(self.outputs.get(r, []))[:n_tokens]
+                if r is not None else [] for r in rids]

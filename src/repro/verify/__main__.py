@@ -1,9 +1,7 @@
 import os
-if "xla_force_host_platform_device_count" not in \
-        os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "") +
-        " --xla_force_host_platform_device_count=8").strip()
+
+from ..hostdev import force_host_devices
+force_host_devices(8)
 
 """Conformance & calibration CLI.  The env line above MUST run before
 jax initializes: the verification mesh needs 8 host devices.
@@ -57,6 +55,7 @@ def main(argv=None) -> int:
     if args.list:
         for c in CELLS:
             print(f"{c.name:16s} {c.arch:22s} {c.family:12s} {c.kind}")
+        print(f"{'serve':16s} {'(engine cell)':22s} {'dense':12s} serve")
         return 0
 
     import jax
@@ -80,13 +79,38 @@ def main(argv=None) -> int:
             "abs_floor_bytes": ABS_FLOOR,
             "dp_slack": DP_SLACK,
         }
-        specs = get_cells(args.cells.split(",") if args.cells else None)
+        # "serve" is a pseudo-cell (the continuous-batching engine, not
+        # a phase cell): in the default all-cells run and selectable by
+        # name next to the phase cells
+        names = args.cells.split(",") if args.cells else None
+        # the serve cell is a pure numerics check, so --no-numerics
+        # skips it too
+        with_serve = (names is None or "serve" in names) \
+            and not args.no_numerics
+        if names is None:
+            specs = get_cells(None)
+        else:
+            names = [n for n in names if n != "serve"]
+            specs = get_cells(names) if names else []
         mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
         recs = run_cells(specs, mesh, numerics=not args.no_numerics,
                          baseline=not args.no_baseline,
                          verbose=not args.json)
         report["cells"] = recs
         ok &= all(r["status"] == "ok" for r in recs)
+        if with_serve:
+            from .serve_cell import run_serve_cell
+            t0 = time.time()
+            srec = run_serve_cell(mesh)
+            report["serve"] = srec
+            ok &= srec["status"] == "ok"
+            if not args.json:
+                print(f"[{srec['status']}] {'serve':16s} "
+                      f"prefill_err={srec.get('prefill_max_abs_err')} "
+                      f"decode_err={srec.get('decode_max_abs_err')} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+                if srec["status"] == "error":
+                    print(srec["traceback"], flush=True)
 
     if args.fuzz:
         from .fuzz import run_fuzz

@@ -4,7 +4,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core.builders import mlp_graph
-from repro.core.plan import ShardingPlan, manual_megatron_plan
+from repro.core.plan import CACHE_ROLES, ShardingPlan, manual_megatron_plan
 from repro.core.solver import MeshAxis, TilingSolution, solve_mesh
 from repro.core.tiling import Part, REPLICATE
 
@@ -90,3 +90,32 @@ class TestFromGraphSolution:
         assert plan2.pspec("wq", ("d_model", "heads")) == P()
         # original untouched
         assert plan.pspec("wq", ("d_model", "heads")) == P(None, "model")
+
+
+class TestForPool:
+    """Serving pools re-batch the plan by slot count (core/plan.py
+    for_pool; the engine shards cache roles through it)."""
+    SIZES = {"data": 4, "model": 2}
+
+    def _plan(self):
+        return manual_megatron_plan(("data", "model"), ("data",), "model")
+
+    def test_dividing_slots_keep_batch_cuts(self):
+        plan = self._plan().for_pool(8, self.SIZES)
+        for role in CACHE_ROLES:
+            assert plan.role_cuts[role]["data"] == "batch", role
+
+    def test_non_dividing_slots_drop_batch_cut(self):
+        plan = self._plan().for_pool(6, self.SIZES)     # 6 % 4 != 0
+        assert plan.role_cuts["kv_cache"]["data"] is None
+        # non-batch cuts survive
+        assert plan.role_cuts["kv_cache"]["model"] == "heads"
+        assert plan.role_cuts["wq"]["model"] == "heads"
+
+    def test_stacked_batch_axes_keep_largest_dividing_prefix(self):
+        plan = ShardingPlan(("a", "b"), {
+            "kv_cache": {"a": "batch", "b": "batch"}})
+        out = plan.for_pool(2, {"a": 2, "b": 2})        # 2 % (2*2) != 0
+        assert out.role_cuts["kv_cache"] == {"a": "batch", "b": None}
+        out = plan.for_pool(4, {"a": 2, "b": 2})
+        assert out.role_cuts["kv_cache"] == {"a": "batch", "b": "batch"}

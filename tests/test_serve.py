@@ -1,0 +1,299 @@
+"""Continuous-batching serving engine invariants (runtime/serve.py).
+
+The load-bearing properties of the slot pool:
+
+(a) co-residency isolation — a request's output is bit-identical whether
+    it runs alone in the pool or next to other active slots;
+(b) no stale-cache leakage — a request admitted into a freed slot
+    produces exactly what a fresh server produces;
+(c) retirement — generation halts when the cache fills (max_len — the
+    seed server silently indexed past the cache end) and at EOS;
+(d) chunked prefill ≡ per-token prefill on the same prompt.
+
+(a) and (b) are written against the seed-era ``admit``/``generate`` API
+on purpose: run against the seed ``Server`` they fail on values (its
+admit loop stepped every slot in the pool per prompt token).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.model import LM
+# NOTE: (a)/(b) below import nothing beyond the seed-era surface and
+# call Server only through admit()/generate() so they *collect and run*
+# against the seed Server — and fail on values there.
+from repro.runtime.serve import ServeConfig, Server
+
+pytestmark = pytest.mark.filterwarnings("ignore::UserWarning")
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_arch("qwen2-1.5b").reduced()
+    model = LM(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def recurrent():
+    cfg = get_arch("xlstm-125m").reduced()
+    model = LM(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, n, rng=None, lo=3, hi=12):
+    rng = rng or np.random.default_rng(0)
+    return [rng.integers(0, cfg.vocab,
+                         size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+class TestCoResidency:
+    def test_outputs_invariant_to_co_resident_slots(self, dense):
+        """(a) bit-identical alone vs co-resident."""
+        cfg, model, params = dense
+        scfg = ServeConfig(slots=4, max_len=48)      # seed-era args only
+        p0, p1, p2, p3 = _prompts(cfg, 4)
+
+        alone = Server(model, params, scfg)
+        alone.admit(p0, 0)
+        out_alone = alone.generate(8)[0]
+
+        co = Server(model, params, scfg)
+        co.admit(p0, 0)
+        co.admit(p1, 1)
+        co.admit(p2, 2)
+        co.admit(p3, 3)
+        out_co = co.generate(8)[0]
+        assert out_alone == out_co
+
+    def test_sampled_streams_invariant_to_co_residents(self, dense):
+        """(a) holds under temperature sampling too: sampling keys
+        derive from (request id, token index), not from a pool-global
+        counter that other admissions would advance."""
+        cfg, model, params = dense
+        scfg = ServeConfig(slots=2, max_len=48, prefill_chunk=8,
+                           temperature=0.9, top_k=8, seed=3)
+        p0, p1 = _prompts(cfg, 2)
+
+        alone = Server(model, params, scfg)
+        alone.admit(p0, 0)                     # rid 0
+        out_alone = alone.generate(6)[0]
+
+        co = Server(model, params, scfg)
+        co.admit(p0, 0)                        # rid 0 here too
+        co.admit(p1, 1)                        # consumes PRNG in between
+        out_co = co.generate(6)[0]
+        assert out_alone == out_co
+
+    def test_mid_generation_admission_does_not_disturb(self, dense):
+        """(a) stronger: admitting slot 1 *while slot 0 is mid-decode*
+        (the seed admit loop stepped slot 0's cache per prompt token)."""
+        cfg, model, params = dense
+        scfg = ServeConfig(slots=2, max_len=48, prefill_chunk=4)
+        p0, p1 = _prompts(cfg, 2)
+
+        alone = Server(model, params, scfg)
+        alone.admit(p0, 0)
+        out_alone = alone.generate(8)[0]
+
+        srv = Server(model, params, scfg)
+        rid0 = srv.admit(p0, 0)
+        for _ in range(3):
+            srv.decode_once()
+        srv.admit(p1, 1)                 # mid-generation admission
+        srv.generate(8)
+        assert srv.outputs[rid0][:8] == out_alone
+
+
+class TestSlotRecycling:
+    def test_freed_slot_behaves_like_fresh_server(self, dense):
+        """(b) retire slot 0, admit a new request into it — identical to
+        a fresh server (no stale KV / position leakage)."""
+        cfg, model, params = dense
+        scfg = ServeConfig(slots=2, max_len=48)      # seed-era args only
+        p_old, p_new = _prompts(cfg, 2, np.random.default_rng(7))
+
+        srv = Server(model, params, scfg)
+        srv.admit(p_old, 0)
+        srv.generate(6)                  # retires slot 0 at 6 tokens
+        assert not srv.active[0]
+        srv.admit(p_new, 0)
+        out_recycled = srv.generate(6)[0]
+
+        fresh = Server(model, params, scfg)
+        fresh.admit(p_new, 0)
+        out_fresh = fresh.generate(6)[0]
+        assert out_recycled == out_fresh
+
+    def test_queue_backfills_freed_slots(self, dense):
+        """5 requests through a 2-slot pool all complete."""
+        cfg, model, params = dense
+        srv = Server(model, params,
+                     ServeConfig(slots=2, max_len=48, prefill_chunk=8))
+        rids = [srv.submit(p, max_new_tokens=4)
+                for p in _prompts(cfg, 5, np.random.default_rng(3))]
+        res = srv.run()
+        assert all(len(res[r]) == 4 for r in rids)
+        assert all(srv.finished[r] == "length" for r in rids)
+
+
+class TestRetirement:
+    def test_halts_at_max_len(self, dense):
+        """(c) the seed max_len overflow regression: with an unbounded
+        token budget the slot must retire when the cache fills, and the
+        position must never run past the cache end."""
+        cfg, model, params = dense
+        max_len, p_len = 12, 5
+        srv = Server(model, params,
+                     ServeConfig(slots=2, max_len=max_len,
+                                 prefill_chunk=4))
+        rid = srv.admit(list(range(1, p_len + 1)), 0)
+        res = srv.run(max_steps=3 * max_len)
+        # prompt fills p_len entries; the first token is free (sampled
+        # from prefill logits); each further token consumes one entry
+        assert len(res[rid]) == max_len - p_len + 1
+        assert srv.finished[rid] == "max_len"
+        assert srv.pos[0] <= max_len
+
+    def test_retires_at_eos(self, dense):
+        cfg, model, params = dense
+        prompt = _prompts(cfg, 1)[0]
+        probe = Server(model, params,
+                       ServeConfig(slots=1, max_len=48, prefill_chunk=8))
+        rid = probe.admit(prompt, 0, max_new_tokens=6)
+        third = probe.run()[rid][2]
+
+        srv = Server(model, params,
+                     ServeConfig(slots=1, max_len=48, prefill_chunk=8,
+                                 eos_id=third))
+        rid = srv.admit(prompt, 0, max_new_tokens=64)
+        res = srv.run()
+        assert srv.finished[rid] == "eos"
+        assert res[rid][-1] == third and len(res[rid]) == 3
+
+    def test_prompt_longer_than_cache_rejected(self, dense):
+        cfg, model, params = dense
+        srv = Server(model, params, ServeConfig(slots=1, max_len=8))
+        with pytest.raises(ValueError):
+            srv.submit(list(range(9)))
+
+
+class TestChunkedPrefill:
+    def test_chunked_equals_tokenwise(self, dense):
+        """(d) same engine, chunk size C vs 1: bit-identical."""
+        cfg, model, params = dense
+        prompt = _prompts(cfg, 1, np.random.default_rng(5), 9, 14)[0]
+        scfg = ServeConfig(slots=2, max_len=48, prefill_chunk=8)
+
+        a = Server(model, params, scfg)
+        a.admit(prompt, 0)
+        out_a = a.generate(6)[0]
+
+        b = Server(model, params, scfg)
+        b.admit(prompt, 0, method="tokenwise")
+        out_b = b.generate(6)[0]
+        assert out_a == out_b
+        np.testing.assert_array_equal(a.prefill_logits[0],
+                                      b.prefill_logits[0])
+
+    def test_scan_prefill_matches_decode_step_loop(self, recurrent):
+        """(d) recurrent family: chunked prefill is bit-identical to the
+        raw per-token decode_step loop (the seed admit path)."""
+        cfg, model, params = recurrent
+        prompt = _prompts(cfg, 1, np.random.default_rng(5), 9, 14)[0]
+        import jax.numpy as jnp
+        step = jax.jit(model.decode_step)
+        cache = model.init_cache(1, 48)
+        for t in prompt:
+            lg, cache = step(params, cache, jnp.asarray([t], jnp.int32))
+        ref = [int(jnp.argmax(lg[0]))]
+        for _ in range(5):
+            lg, cache = step(params, cache,
+                             jnp.asarray([ref[-1]], jnp.int32))
+            ref.append(int(jnp.argmax(lg[0])))
+
+        srv = Server(model, params,
+                     ServeConfig(slots=2, max_len=48, prefill_chunk=8))
+        srv.admit(prompt, 0)
+        assert srv.generate(6)[0] == ref
+
+    def test_parallel_prefill_close_to_decode_step_loop(self, dense):
+        """(d) dense family: the parallel offset-attention chunk path
+        re-associates the softmax, so it matches the per-token loop to
+        bf16 rounding (tokens may differ at near-ties; logits may not)."""
+        cfg, model, params = dense
+        prompt = _prompts(cfg, 1, np.random.default_rng(5), 9, 14)[0]
+        import jax.numpy as jnp
+        step = jax.jit(model.decode_step)
+        cache = model.init_cache(1, 48)
+        for t in prompt:
+            lg, cache = step(params, cache, jnp.asarray([t], jnp.int32))
+
+        srv = Server(model, params,
+                     ServeConfig(slots=1, max_len=48, prefill_chunk=8))
+        srv.admit(prompt, 0)
+        d = float(np.max(np.abs(
+            srv.prefill_logits[0] - np.asarray(lg[0], np.float32))))
+        assert d < 0.05
+
+    def test_partial_final_chunk_padding_is_inert(self, dense):
+        """Prompt length not a multiple of the chunk: the padded tail
+        must not change anything (same prompt, two chunk sizes)."""
+        cfg, model, params = dense
+        prompt = _prompts(cfg, 1, np.random.default_rng(9), 10, 11)[0]
+        outs = []
+        for chunk in (4, 16):
+            srv = Server(model, params,
+                         ServeConfig(slots=1, max_len=48,
+                                     prefill_chunk=chunk))
+            srv.admit(prompt, 0)
+            outs.append(srv.generate(6)[0])
+        assert outs[0] == outs[1]
+
+
+class TestSampling:
+    def test_greedy_is_argmax(self):
+        from repro.runtime.serve import sample_tokens
+        logits = np.random.default_rng(0).normal(size=(5, 33))
+        toks = sample_tokens(jax.numpy.asarray(logits),
+                             jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(np.asarray(toks),
+                                      logits.argmax(-1))
+
+    def test_top_k_restricts_support(self):
+        from repro.runtime.serve import sample_tokens
+        rng = np.random.default_rng(1)
+        logits = jax.numpy.asarray(rng.normal(size=(8, 64)))
+        top4 = np.argsort(np.asarray(logits), -1)[:, -4:]
+        for s in range(20):
+            toks = np.asarray(sample_tokens(logits, jax.random.PRNGKey(s),
+                                            temperature=1.5, top_k=4))
+            for b in range(8):
+                assert toks[b] in top4[b]
+
+    def test_temperature_sampling_deterministic_per_key(self):
+        from repro.runtime.serve import sample_tokens
+        logits = jax.numpy.asarray(
+            np.random.default_rng(2).normal(size=(4, 32)))
+        a = sample_tokens(logits, jax.random.PRNGKey(7), temperature=0.8)
+        b = sample_tokens(logits, jax.random.PRNGKey(7), temperature=0.8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestCacheSurgery:
+    def test_reset_slot_zeroes_only_that_row(self, dense):
+        cfg, model, params = dense
+        srv = Server(model, params,
+                     ServeConfig(slots=3, max_len=32, prefill_chunk=4))
+        p = _prompts(cfg, 2)
+        srv.admit(p[0], 0)
+        srv.admit(p[1], 1)
+        kv_before = np.asarray(srv.cache["kv"]["k"])
+        cache = model.reset_slot(srv.cache, 1)
+        kv = np.asarray(cache["kv"]["k"])
+        assert np.all(kv[:, 1] == 0)
+        np.testing.assert_array_equal(kv[:, 0], kv_before[:, 0])
+        assert int(cache["pos"][1]) == 0
+        assert int(cache["pos"][0]) == int(srv.cache["pos"][0])
