@@ -1,2 +1,11 @@
 """SOYBEAN-JAX: unified data/model/hybrid parallelism via tensor tiling."""
 __version__ = "1.0.0"
+
+
+def __getattr__(name):
+    # lazy: `import repro` stays jax-free; repro.autoshard / repro.capture
+    # pull the trace frontend on first use
+    if name in ("autoshard", "capture"):
+        from . import trace
+        return getattr(trace, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -109,6 +109,19 @@ def _solve_one_cut_fast(g: Graph, arity: int, fixed: Optional[Assignment],
         j = tid[t]
         pen_by_id[j] = [per.get(c, 0.0) for c in choices[j]]
 
+    # penalized tensors no op touches (possible in traced graphs: unused
+    # weights) never enter the DP; charge their cheapest choice up front
+    # so the returned cost matches graph_cost on the returned assignment
+    # (and the brute-force oracle, which enumerates every tensor).
+    touched = {t for op in order for t in g.op_tensors(op)}
+    base_cost = 0.0
+    base_assign: Assignment = {}
+    for j, pj in pen_by_id.items():
+        if names[j] not in touched and pj:
+            ci = min(range(len(pj)), key=pj.__getitem__)
+            base_cost += pj[ci]
+            base_assign[names[j]] = choices[j][ci]
+
     # tie-break: among equal-cost assignments prefer partitioned tensors
     # (bytes left replicated), so ties feed *smaller* subproblems to the
     # later cuts of the k-cut recursion — an equal-cost cut that leaves a
@@ -182,13 +195,14 @@ def _solve_one_cut_fast(g: Graph, arity: int, fixed: Optional[Assignment],
         exact = not hit
 
     full = dict(fixed)
+    full.update(base_assign)
     while node is not None:
         node, pairs = node
         for j, ci in pairs:
             full[names[j]] = choices[j][ci]
     for t in g.tensors:  # untouched tensors -> replicate
         full.setdefault(t, REPLICATE)
-    return OneCutSolution(cost, full, exact=exact)
+    return OneCutSolution(cost + base_cost, full, exact=exact)
 
 
 def _run_dp(steps, n_choice, pen_by_id, tb_by_id, beam: Optional[int],
@@ -292,6 +306,17 @@ def _solve_one_cut_seed(g: Graph, arity: int,
         j = tid[t]
         pen_by_id[j] = [per.get(c, 0.0) for c in choices[j]]
 
+    # op-less penalized tensors (see _solve_one_cut_fast): charge their
+    # cheapest choice up front
+    touched = {t for op in order for t in g.op_tensors(op)}
+    base_cost = 0.0
+    base_assign: Dict[int, int] = {}
+    for j, pj in pen_by_id.items():
+        if names[j] not in touched and pj:
+            ci = min(range(len(pj)), key=pj.__getitem__)
+            base_cost += pj[ci]
+            base_assign[j] = ci
+
     # DP state: tuple of (tensor_id, choice_idx) for live assigned tensors
     # (ascending tensor_id) -> (cost, backpointer dict tensor_id->choice)
     state: Dict[tuple, Tuple[float, Dict[int, int]]] = {(): (0.0, {})}
@@ -340,11 +365,13 @@ def _solve_one_cut_seed(g: Graph, arity: int,
 
     best_cost, best_back = min(state.values(), key=lambda v: v[0])
     full = dict(fixed)
+    for j, ci in base_assign.items():
+        full[names[j]] = choices[j][ci]
     for j, ci in best_back.items():
         full[names[j]] = choices[j][ci]
     for t in g.tensors:  # untouched tensors -> replicate
         full.setdefault(t, REPLICATE)
-    return OneCutSolution(best_cost, full)
+    return OneCutSolution(best_cost + base_cost, full)
 
 
 def _bruteforce_chunk(payload) -> Tuple[float, Optional[Assignment]]:

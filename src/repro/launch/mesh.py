@@ -35,6 +35,21 @@ def solver_axes(*, multi_pod: bool = False) -> List[MeshAxis]:
     return axes
 
 
+def mesh_to_solver_axes(mesh) -> List[MeshAxis]:
+    """MeshAxis list mirroring an *existing* jax Mesh — the solver side
+    of any mesh the caller already built (trace/autoshard, ad-hoc
+    harnesses).  Axes follow the repo naming convention: a ``pod`` axis
+    crosses DCN, everything else rides ICI (same weights as
+    :func:`solver_axes`), and the list is returned slowest-interconnect
+    first (§5.1) regardless of the mesh's own axis order — safe, since
+    plans are keyed by axis *name*."""
+    ici = ICI_BW * ICI_LINKS_PER_AXIS
+    axes = [MeshAxis(str(n), int(s),
+                     DCN_BW if str(n) == "pod" else ici)
+            for n, s in zip(mesh.axis_names, mesh.devices.shape)]
+    return sorted(axes, key=lambda a: a.bandwidth)
+
+
 def make_demo_mesh(n_data: int = 4, n_model: int = 2):
     """Small mesh for CPU multi-device tests (host device count permits)."""
     return make_compat_mesh((n_data, n_model), ("data", "model"))

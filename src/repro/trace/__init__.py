@@ -1,0 +1,6 @@
+"""Automatic frontend: jaxpr capture -> named-dims IR -> solved,
+sharded executable (DESIGN.md §11)."""
+from .autoshard import AutoShard, autoshard
+from .capture import DimTable, Traced, capture
+
+__all__ = ["AutoShard", "autoshard", "capture", "Traced", "DimTable"]

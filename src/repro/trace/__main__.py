@@ -1,0 +1,86 @@
+from ..hostdev import force_host_devices
+
+force_host_devices(8)
+
+"""Autoshard demo / smoke CLI.  The env line above MUST run before jax
+initializes (the demo mesh needs host devices).
+
+  python -m repro.trace                       # plain-jnp MLP on 4x2
+  python -m repro.trace --arch llama3.2-3b    # traced reduced LM forward
+  python -m repro.trace --mesh 2x4 --verify   # exec-check vs serial
+
+Prints the captured graph size, the solved per-tensor plan and the
+predicted wire-byte breakdown; with --verify also executes both the
+sharded and the serial function and reports the max abs error (non-zero
+exit when outside the fuzz band)."""
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.trace")
+    ap.add_argument("--arch", default=None,
+                    help="trace this registry arch's reduced forward "
+                         "instead of the demo MLP")
+    ap.add_argument("--mesh", default="4x2",
+                    help="DATAxMODEL host mesh (default 4x2)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--verify", action="store_true",
+                    help="execute sharded vs serial and compare")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from ..compat import make_compat_mesh
+    from . import autoshard
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_compat_mesh((d, m), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+
+    if args.arch:
+        from ..configs.base import get_arch
+        from ..models.model import LM
+
+        cfg = get_arch(args.arch).reduced()
+        model = LM(cfg)
+        params = model.init(key)
+        toks = jax.random.randint(key, (args.batch, args.seq), 0,
+                                  cfg.vocab)
+        fn = lambda p, t: model.forward(p, t)[0]     # noqa: E731
+        ex_args = (params, toks)
+        ash = autoshard(fn, mesh, *ex_args, weight_argnums=(0,),
+                        name=args.arch)
+    else:
+        from .demo import mlp_fixture
+
+        fn, ex_args, weight_argnums = mlp_fixture()
+        ash = autoshard(fn, mesh, *ex_args,
+                        weight_argnums=weight_argnums, name="mlp")
+
+    print(ash.describe())
+    bk = ash.predicted
+    print("predicted by kind:", {k: f"{v:.3e}"
+                                 for k, v in bk["by_kind"].items()})
+    if not args.verify:
+        return 0
+    out = ash(*ex_args)
+    ref = fn(*ex_args)
+    err = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                  - np.asarray(b, np.float32))))
+              for a, b in zip(jax.tree_util.tree_leaves(ref),
+                              jax.tree_util.tree_leaves(out)))
+    scale = max(float(np.max(np.abs(np.asarray(a, np.float32))))
+                for a in jax.tree_util.tree_leaves(ref))
+    from ..verify.fuzz import EXEC_ATOL
+    from ..verify.numerics import LOGITS_ATOL
+    band = EXEC_ATOL * max(1.0, scale) if not args.arch \
+        else LOGITS_ATOL     # bf16 LM logits: the verify numerics band
+    print(f"max abs err {err:.3e} (scale {scale:.3e}, band {band:.0e})")
+    return 0 if err <= band else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+"""``repro.autoshard``: capture -> solve -> sharded executable.
+
+The "acts as a backend" loop the paper promises: any jittable JAX
+function is traced (capture.py), the captured semantic graph is fed
+through the *unchanged* tiling solver, the solved per-tensor tilings are
+mapped back to per-argument / per-output ``PartitionSpec``s through a
+ShardingPlan keyed by traced tensor ids, and a jitted callable with
+those in/out shardings is returned.  GSPMD inserts the collectives the
+plan implies; the solver only decides *where tensors live*, so
+execution is correct even where capture lowered a primitive coarsely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from ..core.plan import ShardingPlan
+from ..core.solver import (MeshAxis, TilingSolution, solution_breakdown,
+                           solve_mesh)
+from .capture import Traced, capture
+
+
+@dataclasses.dataclass
+class AutoShard:
+    """Result of :func:`autoshard` — call it like the original fn."""
+
+    fn: Callable                  # jitted, in/out shardings applied
+    traced: Traced
+    solution: TilingSolution
+    plan: ShardingPlan            # keyed by traced tensor ids
+    in_shardings: Any             # pytree matching (args, kwargs)
+    out_shardings: Any            # pytree matching the output
+    predicted: Dict[str, object]  # solution_breakdown of the solved plan
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+    @property
+    def predicted_bytes(self) -> float:
+        return float(self.predicted["total"])
+
+    def describe(self) -> str:
+        g = self.traced.graph
+        lines = [f"autoshard[{g.name}]: {len(g.ops)} ops, "
+                 f"{len(g.tensors)} tensors, "
+                 f"predicted {self.predicted_bytes:.3e} wire bytes"]
+        for t, ts in g.tensors.items():
+            cuts = self.plan.role_cuts.get(t, {})
+            s = ", ".join(f"{a}->{d}" for a, d in cuts.items() if d)
+            if s:
+                lines.append(f"  {t:24s} [{s}]")
+        if self.traced.unknown_primitives:
+            lines.append("  (coarse fallback for: "
+                         + ", ".join(self.traced.unknown_primitives)
+                         + ")")
+        return "\n".join(lines)
+
+
+def _leaf_sharding(mesh, plan: ShardingPlan, tensor: Optional[str],
+                   dims):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if tensor is None:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, plan.pspec(tensor, dims))
+
+
+def autoshard(fn: Callable, mesh, *example_args,
+              axes: Optional[Sequence[MeshAxis]] = None,
+              weight_argnums: Sequence[int] = (),
+              beam="auto", mem_scale: float = 1.0,
+              name: Optional[str] = None,
+              traced: Optional[Traced] = None,
+              **example_kwargs) -> AutoShard:
+    """Automatically parallelize ``fn`` over ``mesh``.
+
+    ``fn`` is traced on the example arguments, the captured graph is
+    solved on mesh-matched axes (override with ``axes`` for explicit
+    bandwidth weights), and the returned :class:`AutoShard` wraps a
+    ``jax.jit`` of ``fn`` with the solved in/out shardings.  Shapes are
+    fixed to the example shapes (one plan per shape, like any jit
+    specialization).  ``weight_argnums`` marks argument positions whose
+    array leaves are parameters (enables the capacity-aware terms).
+    ``traced``: reuse an existing :func:`capture` of the SAME fn and
+    example shapes instead of tracing again."""
+    import jax
+
+    from ..launch.mesh import mesh_to_solver_axes
+
+    if traced is None:
+        traced = capture(fn, *example_args, name=name,
+                         weight_argnums=weight_argnums,
+                         **example_kwargs)
+    if axes is None:
+        axes = mesh_to_solver_axes(mesh)
+    sol = solve_mesh(traced.graph, axes, beam=beam, mem_scale=mem_scale)
+    plan = ShardingPlan.from_solution(sol, traced.tensor_roles())
+    predicted = solution_breakdown(traced.graph, sol.axes, sol.per_axis)
+
+    in_leaves = [_leaf_sharding(mesh, plan, t, d)
+                 for t, d in zip(traced.in_tensors, traced.in_dims)]
+    in_shardings = jax.tree_util.tree_unflatten(traced.in_tree,
+                                                in_leaves)
+    out_flat, out_tree = jax.tree_util.tree_flatten(traced.out_shape)
+    out_leaves = [_leaf_sharding(mesh, plan, t, d)
+                  for t, d in zip(traced.out_tensors[:len(out_flat)],
+                                  traced.out_dims[:len(out_flat)])]
+    out_shardings = jax.tree_util.tree_unflatten(out_tree, out_leaves)
+
+    s_args, s_kwargs = in_shardings
+    if s_kwargs:
+        # jit in_shardings only cover positional parameters: route the
+        # example keywords through positional slots so their solved
+        # shardings are applied too (calls must use the same keywords)
+        keys = tuple(sorted(s_kwargs))
+
+        def positional_fn(*all_args):
+            pos = all_args[:len(s_args)]
+            kw = dict(zip(keys, all_args[len(s_args):]))
+            return fn(*pos, **kw)
+
+        inner = jax.jit(
+            positional_fn,
+            in_shardings=tuple(s_args) + tuple(s_kwargs[k]
+                                               for k in keys),
+            out_shardings=out_shardings)
+
+        def jitted(*args, **kwargs):
+            if set(kwargs) != set(keys):
+                raise TypeError(
+                    f"autoshard'ed fn was traced with keyword args "
+                    f"{sorted(keys)}; called with {sorted(kwargs)} "
+                    f"(the specialization covers exactly the traced "
+                    f"keywords)")
+            return inner(*args, *(kwargs[k] for k in keys))
+    else:
+        jitted = jax.jit(fn, in_shardings=tuple(s_args) or None,
+                         out_shardings=out_shardings)
+
+    return AutoShard(jitted, traced, sol, plan, in_shardings,
+                     out_shardings, predicted)

@@ -1,0 +1,26 @@
+"""Shared autoshard demo fixture: the un-modeled plain-jnp MLP used by
+BOTH the CLI smoke (python -m repro.trace) and the conformance-gated
+trace cell (verify/trace_cell.py) — one definition, so CI smokes
+exactly the program the committed CONFORMANCE.json gates."""
+from __future__ import annotations
+
+
+def mlp_fixture(seed: int = 0):
+    """Returns (fn, example_args, weight_argnums) for a 3-layer MLP in
+    plain jax.numpy — no builder, no roles, no config."""
+    import jax
+    import jax.numpy as jnp
+
+    def mlp(x, w1, b1, w2, b2, w3):
+        h = jnp.tanh(x @ w1 + b1)
+        h = jnp.tanh(h @ w2 + b2)
+        return h @ w3
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    args = (jax.random.normal(ks[0], (16, 64), jnp.float32),
+            jax.random.normal(ks[1], (64, 128), jnp.float32) * 0.1,
+            jax.random.normal(ks[2], (128,), jnp.float32) * 0.1,
+            jax.random.normal(ks[3], (128, 128), jnp.float32) * 0.1,
+            jax.random.normal(ks[4], (128,), jnp.float32) * 0.1,
+            jax.random.normal(ks[5], (128, 32), jnp.float32) * 0.1)
+    return mlp, args, (1, 2, 3, 4, 5)

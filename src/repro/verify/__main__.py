@@ -56,6 +56,8 @@ def main(argv=None) -> int:
         for c in CELLS:
             print(f"{c.name:16s} {c.arch:22s} {c.family:12s} {c.kind}")
         print(f"{'serve':16s} {'(engine cell)':22s} {'dense':12s} serve")
+        print(f"{'trace':16s} {'(frontend cell)':22s} {'3 families':12s}"
+              f" trace")
         return 0
 
     import jax
@@ -79,18 +81,19 @@ def main(argv=None) -> int:
             "abs_floor_bytes": ABS_FLOOR,
             "dp_slack": DP_SLACK,
         }
-        # "serve" is a pseudo-cell (the continuous-batching engine, not
-        # a phase cell): in the default all-cells run and selectable by
-        # name next to the phase cells
+        # "serve" (continuous-batching engine) and "trace" (jaxpr
+        # frontend) are pseudo-cells, not phase cells: in the default
+        # all-cells run and selectable by name next to the phase cells
         names = args.cells.split(",") if args.cells else None
         # the serve cell is a pure numerics check, so --no-numerics
         # skips it too
         with_serve = (names is None or "serve" in names) \
             and not args.no_numerics
+        with_trace = names is None or "trace" in names
         if names is None:
             specs = get_cells(None)
         else:
-            names = [n for n in names if n != "serve"]
+            names = [n for n in names if n not in ("serve", "trace")]
             specs = get_cells(names) if names else []
         mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
         recs = run_cells(specs, mesh, numerics=not args.no_numerics,
@@ -111,6 +114,23 @@ def main(argv=None) -> int:
                       f"({time.time() - t0:.0f}s)", flush=True)
                 if srec["status"] == "error":
                     print(srec["traceback"], flush=True)
+        if with_trace:
+            from .trace_cell import run_trace_cell
+            t0 = time.time()
+            trec = run_trace_cell(mesh, numerics=not args.no_numerics)
+            report["trace"] = trec
+            ok &= trec["status"] == "ok"
+            if not args.json:
+                fams = trec.get("families", [])
+                ratios = " ".join(
+                    f"{f['family']}={f['ratio']:.2f}" for f in fams)
+                mlp = trec.get("mlp", {})
+                print(f"[{trec['status']}] {'trace':16s} {ratios} "
+                      f"mlp_oracle={mlp.get('oracle_ok')} "
+                      f"mlp_err={mlp.get('max_abs_err')} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+                if trec["status"] == "error":
+                    print(trec["traceback"], flush=True)
 
     if args.fuzz:
         from .fuzz import run_fuzz
@@ -128,6 +148,8 @@ def main(argv=None) -> int:
                   f"oracle={fz.oracle_checked} "
                   f"perm={fz.permutation_checked} "
                   f"exec={fz.exec_checked} "
+                  f"trace={fz.trace_checked} "
+                  f"trace_exec={fz.trace_exec_checked} "
                   f"({time.time() - t0:.0f}s)", flush=True)
             for f in fz.failures[:20]:
                 print(f"  FAIL {f}", flush=True)

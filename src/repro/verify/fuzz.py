@@ -13,6 +13,14 @@ invariants that must hold on *every* graph:
   execution    a solved plan, forced onto a real device mesh via
                ShardingPlan, computes the same numbers as the serial
                program (executor.py)
+  trace        the graph round-trips through the jaxpr frontend: a JAX
+               function *generated from the graph* (executor semantics)
+               is captured by repro.trace and re-solved; the captured
+               graph must never solve WORSE than the original (capture
+               may only relax: it drops artificial align whitelists and
+               adds REDUCED forms), and `repro.autoshard` of the
+               generated function must execute value-identical to the
+               serial interpreter
 
 Plain ``random.Random`` generation so the fuzzer runs in minimal
 containers; when the real `hypothesis` package is installed,
@@ -34,6 +42,9 @@ from ..core.tiling import REPLICATE
 
 _DIM_SIZES = (2, 4, 8)
 _MAX_BRUTE_COMBOS = 200_000
+# f32 end-to-end execution band, shared by the fuzz exec invariants,
+# the trace-cell MLP gate and the autoshard CLI smoke
+EXEC_ATOL = 2e-4
 
 
 def random_graph(rng: random.Random, min_ops: int = 2,
@@ -153,6 +164,8 @@ class FuzzResult:
     oracle_checked: int = 0
     permutation_checked: int = 0
     exec_checked: int = 0
+    trace_checked: int = 0
+    trace_exec_checked: int = 0
     skipped_too_big: int = 0
     failures: List[str] = dataclasses.field(default_factory=list)
 
@@ -166,7 +179,7 @@ class FuzzResult:
 
 def check_graph(g: Graph, arity: int, rng: random.Random,
                 result: FuzzResult, exec_mesh=None,
-                atol: float = 2e-4) -> None:
+                atol: float = EXEC_ATOL) -> None:
     """Run all invariants on one graph; append failures to ``result``."""
     rel = 1e-9
 
@@ -213,9 +226,39 @@ def check_graph(g: Graph, arity: int, rng: random.Random,
             f"{g.name}@{arity}: permuted clone cost {sol2.cost} != "
             f"{sol.cost}")
 
+    # trace round-trip: generate the graph's JAX program (executor
+    # semantics), capture its jaxpr back through the trace frontend and
+    # re-solve.  Capture can only *relax* the problem (no align
+    # whitelists, REDUCED forms available), so the captured optimum must
+    # never exceed the original one — equality in the typical case.
+    # Penalties are off on both sides: they depend on tensor kinds
+    # (weight/opt) that a jaxpr does not carry.
+    import jax
+
+    from . import executor
+    from ..trace import capture
+
+    leaves = executor.leaf_tensors(g)
+    sds = {t: jax.ShapeDtypeStruct(tuple(g.tensors[t].shape), "float32")
+           for t in leaves}
+    sinks = executor.sink_tensors(g)
+
+    def gen_fn(vals):
+        full = executor.execute(g, dict(vals))
+        return {t: full[t] for t in sinks}
+
+    traced = capture(gen_fn, sds, name=g.name)
+    c0 = solve_one_cut(g, arity, beam="auto", mem_scale=0.0).cost
+    c1 = solve_one_cut(traced.graph, arity, beam="auto",
+                       mem_scale=0.0).cost
+    result.trace_checked += 1
+    if c1 > c0 * (1.0 + 1e-9) + 1.0:
+        result.failures.append(
+            f"{g.name}@{arity}: trace round-trip solved to {c1} > "
+            f"original {c0}")
+
     # sharded-vs-serial execution of the solved plan
     if exec_mesh is not None:
-        from . import executor
         import numpy as np
 
         msol = solve_mesh(g, [MeshAxis(exec_mesh.axis_names[0],
@@ -233,6 +276,25 @@ def check_graph(g: Graph, arity: int, rng: random.Random,
             if err > atol * max(1.0, scale):
                 result.failures.append(
                     f"{g.name}@mesh: sharded {t} differs by {err} "
+                    f"(scale {scale})")
+
+        # autoshard the generated program end-to-end (solve on the fuzz
+        # mesh, jit with solved in/out shardings) and compare against
+        # the serial interpreter values
+        from ..trace import autoshard
+
+        ash = autoshard(gen_fn, exec_mesh, vals, name=g.name,
+                        mem_scale=0.0, traced=traced)
+        auto = ash(vals)
+        result.trace_exec_checked += 1
+        for t in sinks:
+            ref = np.asarray(serial[t], np.float32)
+            got = np.asarray(auto[t], np.float32)
+            err = float(np.max(np.abs(ref - got))) if ref.size else 0.0
+            scale = float(np.max(np.abs(ref))) if ref.size else 0.0
+            if err > atol * max(1.0, scale):
+                result.failures.append(
+                    f"{g.name}@mesh: autoshard {t} differs by {err} "
                     f"(scale {scale})")
 
 

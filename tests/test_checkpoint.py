@@ -1,0 +1,178 @@
+"""checkpoint/ckpt.py: atomic-commit semantics (a crash mid-write must
+leave ``latest_step`` at the previous committed step and no debris) and
+elastic reshard-on-restore onto a different mesh via ``sharding_fn``."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _tree(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(key, (8, 16), jnp.float32),
+        "moments": {"m": jnp.zeros((8, 16), jnp.float32),
+                    "step": jnp.asarray(seed, jnp.int32)},
+        "bf16": jnp.ones((4,), jnp.bfloat16) * 1.5,
+    }
+
+
+class TestAtomicCommit:
+    def test_save_restore_roundtrip(self, tmp_path):
+        d = str(tmp_path)
+        tree = _tree(3)
+        path = ckpt.save(d, 3, tree, extra={"tokens": 123})
+        assert os.path.basename(path) == "step_00000003"
+        assert ckpt.latest_step(d) == 3
+        out, extra = ckpt.restore(d, 3, tree)
+        assert extra == {"tokens": 123}
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(out)):
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_crash_mid_write_keeps_previous_step(self, tmp_path,
+                                                 monkeypatch):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree(1))
+        assert ckpt.latest_step(d) == 1
+
+        # crash while the arrays file is being written: the tmp dir must
+        # be cleaned up and step 1 must stay the committed latest
+        real_savez = np.savez
+
+        def exploding_savez(path, **arrays):
+            with open(path, "wb") as f:      # partial write, then crash
+                f.write(b"PARTIAL")
+            raise OSError("disk full")
+
+        monkeypatch.setattr(np, "savez", exploding_savez)
+        with pytest.raises(OSError):
+            ckpt.save(d, 2, _tree(2))
+        monkeypatch.setattr(np, "savez", real_savez)
+
+        assert ckpt.latest_step(d) == 1
+        assert not os.path.exists(os.path.join(d, "step_00000002"))
+        assert not [n for n in os.listdir(d) if n.startswith(".tmp_")]
+        # the prior checkpoint still restores
+        out, _ = ckpt.restore(d, 1, _tree(1))
+        assert jax.tree_util.tree_leaves(out)
+
+    def test_crash_during_manifest_keeps_previous_step(self, tmp_path,
+                                                       monkeypatch):
+        d = str(tmp_path)
+        ckpt.save(d, 5, _tree(5))
+
+        def exploding_dump(*a, **k):
+            raise RuntimeError("killed")
+
+        monkeypatch.setattr(json, "dump", exploding_dump)
+        with pytest.raises(RuntimeError):
+            ckpt.save(d, 6, _tree(6))
+        monkeypatch.undo()
+
+        assert ckpt.latest_step(d) == 5
+        assert not [n for n in os.listdir(d) if n.startswith(".tmp_")]
+
+    def test_uncommitted_dir_ignored_by_latest_step(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 2, _tree(2))
+        # a step dir without manifest.json (e.g. torn rename on a
+        # non-atomic filesystem) must not be treated as committed
+        os.makedirs(os.path.join(d, "step_00000009"))
+        assert ckpt.latest_step(d) == 2
+
+    def test_overwrite_same_step(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 4, _tree(1))
+        ckpt.save(d, 4, _tree(2))
+        out, _ = ckpt.restore(d, 4, _tree(0))
+        np.testing.assert_array_equal(
+            np.asarray(out["moments"]["step"]), 2)
+
+    def test_gc_keeps_newest(self, tmp_path):
+        d = str(tmp_path)
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(d, s, _tree(s))
+        ckpt.gc_old(d, keep=2)
+        assert ckpt.latest_step(d) == 5
+        steps = sorted(n for n in os.listdir(d)
+                       if n.startswith("step_"))
+        assert steps == ["step_00000004", "step_00000005"]
+
+
+class TestElasticRestoreSingleProc:
+    def test_sharding_fn_receives_path_and_array(self, tmp_path):
+        d = str(tmp_path)
+        tree = _tree(0)
+        ckpt.save(d, 1, tree)
+        seen = []
+
+        def sharding_fn(path, arr):
+            seen.append((path, arr.shape))
+            return jax.devices()[0]      # device_put target
+
+        out, _ = ckpt.restore(d, 1, tree, sharding_fn=sharding_fn)
+        assert {p for p, _ in seen} == {"w", "moments/m", "moments/step",
+                                        "bf16"}
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+class TestElasticRestoreAcrossMeshes:
+    def test_reshard_4x2_checkpoint_onto_2x4(self, tmp_path):
+        """Save sharded on a (4,2) mesh, restore onto a (2,4) mesh with
+        a different partitioning via sharding_fn: values identical,
+        new shardings applied."""
+        code = f"""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.compat import make_compat_mesh
+            from repro.checkpoint import ckpt
+
+            m1 = make_compat_mesh((4, 2), ("data", "model"))
+            key = jax.random.PRNGKey(0)
+            tree = {{"w": jax.device_put(
+                        jax.random.normal(key, (16, 32), jnp.float32),
+                        NamedSharding(m1, P("data", "model"))),
+                    "b": jax.device_put(
+                        jax.random.normal(key, (32,), jnp.float32),
+                        NamedSharding(m1, P("model")))}}
+            ckpt.save({str(tmp_path)!r}, 7, tree)
+
+            m2 = make_compat_mesh((2, 4), ("data", "model"))
+            specs = {{"w": P("model", "data"), "b": P(None)}}
+            def sharding_fn(path, arr):
+                return NamedSharding(m2, specs[path.split("/")[-1]])
+            out, _ = ckpt.restore({str(tmp_path)!r}, 7, tree,
+                                  sharding_fn=sharding_fn)
+            for k in ("w", "b"):
+                np.testing.assert_array_equal(np.asarray(out[k]),
+                                              np.asarray(tree[k]))
+                assert out[k].sharding.mesh.shape == m2.shape, k
+            assert out["w"].sharding.spec == specs["w"]
+            print("OK")
+        """
+        env = dict(
+            os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            PYTHONPATH=SRC)
+        out = subprocess.run([sys.executable, "-c",
+                              textwrap.dedent(code)],
+                             capture_output=True, text=True, env=env,
+                             timeout=560)
+        assert out.returncode == 0, out.stderr[-4000:]
+        assert "OK" in out.stdout

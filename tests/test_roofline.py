@@ -1,0 +1,75 @@
+"""analysis/roofline.py smoke: analyze a real compiled dry-run artifact
+(reduced arch, single-device mesh — the same launch/compile.py path the
+production tables use) and check every reported term is sane."""
+import jax
+import pytest
+
+from repro.analysis import roofline
+from repro.compat import make_compat_mesh
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.core.plan import ShardingPlan
+
+
+@pytest.fixture(scope="module")
+def compiled_cell():
+    from repro.launch.compile import compile_step, input_specs
+
+    cfg = get_arch("qwen2-1.5b").reduced()
+    shape = ShapeConfig("smoke", 16, 4, "prefill")
+    mesh = make_compat_mesh((1,), ("data",), devices=jax.devices()[:1])
+    plan = ShardingPlan(("data",), {})
+    ins = input_specs(cfg, shape)
+    compiled, _, _ = compile_step(cfg, shape, plan, mesh, ins)
+    return cfg, shape, compiled
+
+
+class TestRooflineOnCompiledArtifact:
+    def test_analyze_reports_sane_terms(self, compiled_cell):
+        cfg, shape, compiled = compiled_cell
+        mf = roofline.model_train_flops(cfg, shape)
+        assert mf == pytest.approx(
+            2.0 * cfg.active_param_count() * shape.tokens)
+        rl = roofline.analyze(compiled, compiled.as_text(), 1, mf,
+                              cfg.name, shape.name, "host1")
+        assert rl.flops_per_dev > 0
+        assert rl.hbm_bytes_per_dev > 0
+        assert rl.wire_bytes_per_dev == 0.0    # single device: no ring
+        assert rl.t_compute > 0 and rl.t_memory > 0
+        assert rl.t_collective == 0.0
+        assert rl.dominant in ("compute", "memory", "collective")
+        # 2ND vs HLO flops is only calibrated on production shapes; on
+        # the reduced config just require finite, positive, O(1) values
+        assert 0 < rl.useful_ratio < 10
+        assert 0 <= rl.roofline_fraction < 10
+
+    def test_ideal_bytes_and_mem_efficiency(self, compiled_cell):
+        cfg, shape, compiled = compiled_cell
+        rl = roofline.analyze(compiled, compiled.as_text(), 1,
+                              roofline.model_train_flops(cfg, shape),
+                              cfg.name, shape.name, "host1")
+        assert rl.mem_efficiency is None      # not set yet
+        rl.ideal_bytes_per_dev = roofline.ideal_step_bytes(
+            1e6, 0.0, shape.kind, 1)
+        eff = rl.mem_efficiency
+        assert eff is not None and 0 < eff <= 1.0
+
+    def test_to_dict_round_trips_json(self, compiled_cell):
+        import json
+
+        cfg, shape, compiled = compiled_cell
+        rl = roofline.analyze(compiled, compiled.as_text(), 1,
+                              roofline.model_train_flops(cfg, shape),
+                              cfg.name, shape.name, "host1")
+        d = json.loads(json.dumps(rl.to_dict()))
+        for k in ("flops_per_dev", "t_compute", "t_memory",
+                  "t_collective", "dominant", "useful_ratio",
+                  "collective_counts", "roofline_fraction"):
+            assert k in d
+
+    def test_ideal_step_bytes_orders(self):
+        p, s = 1e9, 2e9
+        d = roofline.ideal_step_bytes(p, s, "decode", 8)
+        t = roofline.ideal_step_bytes(p, s, "train", 8)
+        f = roofline.ideal_step_bytes(p, s, "prefill", 8)
+        assert f < d < t
