@@ -1,8 +1,9 @@
-"""End-to-end sharded training driver: 8 host devices, solver plan,
-~100M-param llama-style model, a few hundred steps.
+"""End-to-end sharded training driver on the plan-driven engine
+(repro.train): 8 host devices, solver plan with ZeRO-style optimizer
+state tiling, ~100M-param llama-style model.
 
   PYTHONPATH=src python examples/multihost_train.py --steps 300
-(defaults to 40 steps so the example finishes quickly on 1 CPU)
+(defaults to 10 steps so the example finishes quickly on 1 CPU)
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -13,19 +14,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import dataclasses
 import jax
 
-from repro.compat import make_compat_mesh, use_mesh
+from repro.compat import make_compat_mesh
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.core.builders import transformer_graph
 from repro.core.plan import ShardingPlan
 from repro.core.solver import MeshAxis, solve_mesh
-from repro.data.pipeline import DataConfig
+from repro.data.pipeline import BatchFeed, DataConfig
 from repro.models.model import LM
 from repro.optim.adamw import AdamWConfig
-from repro.runtime.train_loop import TrainConfig, train
+from repro.train import EngineConfig, TrainEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=10)
+ap.add_argument("--microbatches", type=int, default=2)
 ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
 args = ap.parse_args()
 
@@ -34,21 +36,42 @@ cfg = dataclasses.replace(
     get_arch("llama3.2-3b"), n_layers=12, d_model=512, n_heads=8,
     n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32000)
 shape = ShapeConfig("ex", seq_len=128, global_batch=16, kind="train")
-g = transformer_graph(cfg, shape)
+
+# solve with the optimizer-state tensors in the graph: the engine keeps
+# an f32 master copy, so the solver prices (and usually ZeRO-shards) it
+g = transformer_graph(cfg, shape, master_fp32=True)
 sol = solve_mesh(g, [MeshAxis("data", 4), MeshAxis("model", 2)], beam=4000)
 plan = ShardingPlan.from_graph_solution(sol, g)
 print("plan:", {r: c for r, c in sorted(plan.role_cuts.items())
                 if any(c.values())})
 
 mesh = make_compat_mesh((4, 2), ("data", "model"))
-model = LM(cfg, plan=plan)
+engine = TrainEngine(
+    LM(cfg, plan=plan, mesh=mesh),
+    EngineConfig(microbatches=args.microbatches,
+                 optim=AdamWConfig(lr=1e-3, total_steps=args.steps)),
+    mesh=mesh)
+
+restored = engine.restore(args.ckpt_dir)
+if restored is not None:
+    state, _, start = restored
+    print(f"resumed from step {start}")
+else:
+    state, start = engine.init_state(jax.random.PRNGKey(0)), 0
+
 dcfg = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=16)
-tcfg = TrainConfig(steps=args.steps, ckpt_every=50,
-                   ckpt_dir=args.ckpt_dir,
-                   optim=AdamWConfig(lr=1e-3, total_steps=args.steps))
-with use_mesh(mesh):
-    out = train(model, dcfg, tcfg)
-h = out["history"]
-print(f"params ~{sum(x.size for x in jax.tree_util.tree_leaves(out['params']))/1e6:.0f}M")
-print(f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} in {len(h)} steps; "
-      f"checkpoints in {args.ckpt_dir}")
+losses = []
+with BatchFeed(dcfg, start_step=start,
+               shardings=engine.batch_shardings()) as feed:
+    for step in range(start, args.steps):
+        state, metrics = engine.step(state, feed.get())
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % 50 == 0 or step + 1 == args.steps:
+            engine.save(args.ckpt_dir, step + 1, state)
+
+n_params = sum(x.size for x in
+               jax.tree_util.tree_leaves(state["params"]))
+print(f"params ~{n_params / 1e6:.0f}M")
+if losses:
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} in {len(losses)} "
+          f"steps; checkpoints in {args.ckpt_dir}")

@@ -1,0 +1,26 @@
+"""`--plan auto` training on a reduced config: the launch harness solves
+the train tiling for the mesh (cached under .cache/plans), shards
+params + optimizer state + batch with it, and reports tokens/s with a
+step-time breakdown.
+
+  PYTHONPATH=src python examples/train_sharded.py
+
+Equivalent CLI:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --steps 12 --batch 16 --seq 32 --mesh 4x2 --plan auto \
+      --microbatches 2
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+sys.exit(main([
+    "--arch", "llama3.2-3b", "--reduced",
+    "--steps", "12", "--batch", "16", "--seq", "32",
+    "--mesh", "4x2", "--plan", "auto",
+    "--microbatches", "2",
+]))

@@ -83,12 +83,27 @@ def restore(directory: str, step: int, like: PyTree,
             sharding_fn: Optional[Callable[[str, np.ndarray], Any]] = None
             ) -> Tuple[PyTree, Dict[str, Any]]:
     """Restore into the structure of ``like``.  ``sharding_fn`` enables
-    elastic restore onto a different mesh."""
+    elastic restore onto a different mesh.
+
+    Without a ``sharding_fn``, a leaf of ``like`` that is a committed
+    ``jax.Array`` is restored under *that leaf's own sharding* — restoring
+    a solved-plan training state (params AND tiled optimizer moments /
+    master weights) must land each array back on its solved layout, not
+    silently replicate it.  Plain numpy / ShapeDtypeStruct leaves keep
+    the old host-array behaviour."""
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
     leaves = _flatten_with_paths(like)
+    missing = [k for k, _ in leaves if k not in data.files]
+    if missing:
+        raise ValueError(
+            f"checkpoint step {step} in {directory} lacks keys "
+            f"{missing[:5]}{'...' if len(missing) > 5 else ''} that the "
+            f"restore target expects — saved with a different state "
+            f"layout? (e.g. the training engine's master_fp32 / "
+            f"grad_compression flags changed between runs)")
     new_leaves = []
     for key, leaf in leaves:
         arr = data[key]
@@ -96,9 +111,25 @@ def restore(directory: str, step: int, like: PyTree,
             arr = np.asarray(arr).astype(leaf.dtype)
         if sharding_fn is not None:
             arr = jax.device_put(arr, sharding_fn(key, arr))
+        elif isinstance(leaf, jax.Array):
+            arr = jax.device_put(arr, leaf.sharding)
         new_leaves.append(arr)
     treedef = jax.tree_util.tree_structure(like)
     return treedef.unflatten(new_leaves), manifest["extra"]
+
+
+def tree_sharding_fn(shardings: PyTree) -> Callable[[str, np.ndarray], Any]:
+    """``sharding_fn`` for :func:`restore` from a pytree of shardings
+    shaped like the checkpointed state — the elastic-restart path: build
+    the target mesh's solved shardings (params, optimizer state, master
+    weights, error residuals all under their own plan roles) and every
+    restored leaf is placed straight onto the new layout."""
+    flat = dict(_flatten_with_paths(shardings))
+
+    def fn(path: str, arr: np.ndarray):
+        return flat[path]
+
+    return fn
 
 
 def gc_old(directory: str, keep: int = 3) -> None:

@@ -141,11 +141,22 @@ class GraphBuilder:
                       dict(ts.units))
         return nm
 
-    def add_backward(self, seed: str) -> None:
+    def add_backward(self, seed: str, *, master_fp32: bool = False,
+                     error_feedback: bool = False) -> None:
         """Mirror all recorded forward ops (reverse order) into backward +
         gradient ops; add parameter-update ops.  ``seed``: activation whose
         gradient starts the chain (created as an input-like tensor tied to
-        the forward value by a zero-cost ewise)."""
+        the forward value by a zero-cost ewise).
+
+        ``master_fp32``: add fp32 master-weight tensors (mixed-precision
+        training keeps an fp32 copy next to the bf16 compute weight; the
+        update op reads+writes the master, and the write-back into the
+        bf16 weight is what the all-gather after a ZeRO-sharded update
+        moves — 2 bytes/elem, not 4).  ``error_feedback``: add the fp32
+        error-feedback residual of int8 compressed gradient sync
+        (optim/compression.py) as persistent per-weight state.  Both ride
+        the update op, so the solver prices their tilings jointly with the
+        weight / gradient / moment tilings (DESIGN.md §12)."""
         accum: Dict[str, int] = {}
         # seed gradient (loss backward), tied to fwd value
         seed_g = self._ensure_grad(seed, accum)
@@ -217,19 +228,31 @@ class GraphBuilder:
         # parameter updates: the op writes back into W itself, so the
         # solver cannot pick a next-iteration weight tiling that differs
         # from this iteration's (the update ties them).  The Adam moments
-        # participate as fp32 'opt' tensors (2 x 4 bytes): the aligned-
-        # form machinery then prices ZeRO-style sharded updates exactly
-        # (dW red->P reduce-scatter, m/v: P, W': P->r all-gather).
+        # participate as fp32 'opt' tensors (2 x 4 bytes) — and, when
+        # requested, the fp32 master weight and the compression error-
+        # feedback residual: the aligned-form machinery then prices
+        # ZeRO-style sharded updates exactly (dW red->P reduce-scatter,
+        # m/v/master/err: P local, W': P->r all-gather of the *bf16*
+        # compute weight).  Each state tensor gets a derived role
+        # (<role>.opt / .master / .err) so ShardingPlan carries its
+        # solved tiling out to the training engine (repro.train).
         for w in self.weights:
             grp = self._weight_group.get(w, 0)
             dw = grad_of(w, grp)
             if dw is None:
                 continue
             ts = self.g.tensors[w]
-            mv = self.g.tensor(f"opt:{w}", ts.dims, ts.shape, 8.0, "opt",
-                               (ts.role + ".opt") if ts.role else None,
-                               dict(ts.units))
-            self.g.ewise(f"upd:{w}", (w, dw, mv), w, update=True)
+            upd = [w, dw]
+            for tag, bpe, on in (("opt", 8.0, True),
+                                 ("master", 4.0, master_fp32),
+                                 ("err", 4.0, error_feedback)):
+                if not on:
+                    continue
+                upd.append(self.g.tensor(
+                    f"{tag}:{w}", ts.dims, ts.shape, bpe, "opt",
+                    (ts.role + f".{tag}") if ts.role else None,
+                    dict(ts.units)))
+            self.g.ewise(f"upd:{w}", tuple(upd), w, update=True)
             self._tag(grp)
 
 
@@ -238,7 +261,9 @@ class GraphBuilder:
 # --------------------------------------------------------------------------
 
 def mlp_graph(batch: int, hidden: List[int], bytes_per_elem: float = FP32,
-              with_backward: bool = True, seed_free: bool = False) -> Graph:
+              with_backward: bool = True, seed_free: bool = False,
+              master_fp32: bool = False,
+              error_feedback: bool = False) -> Graph:
     """The paper's MLP: L fully-connected layers.  ``hidden`` holds L+1
     widths.  ``seed_free``: don't charge for the loss-seed conversion
     (the paper's §2.2 accounting *includes* it in the activation total,
@@ -256,7 +281,8 @@ def mlp_graph(batch: int, hidden: List[int], bytes_per_elem: float = FP32,
         b.einsum(f"x{l-1}" if l > 1 else "x0", w, x,
                  grads=(l > 1, True))
     if with_backward:
-        b.add_backward(x)
+        b.add_backward(x, master_fp32=master_fp32,
+                       error_feedback=error_feedback)
         if seed_free:
             for op in b.g.ops:
                 if op.name.startswith("seed:"):
@@ -511,10 +537,14 @@ def _layer(b: GraphBuilder, cfg: ArchConfig, x: str, tag: str, rep: float,
 
 
 def transformer_graph(cfg: ArchConfig, shape: ShapeConfig,
-                      n_rep: int = 2) -> Graph:
+                      n_rep: int = 2, master_fp32: bool = False,
+                      error_feedback: bool = False) -> Graph:
     """Training (or prefill) semantic graph: embed -> n_rep chained
     representative layers carrying repeat=L/n_rep -> head -> loss (+ full
-    backward & updates for training shapes)."""
+    backward & updates for training shapes).  ``master_fp32`` /
+    ``error_feedback`` add the corresponding optimizer-state tensors to
+    the update ops (see GraphBuilder.add_backward) — the training engine
+    solves with the flags matching its runtime policy."""
     B, S, d, V = shape.global_batch, shape.seq_len, cfg.d_model, cfg.vocab
     b = GraphBuilder(f"{cfg.name}:{shape.name}")
     # embedding: one-hot trick (zero-byte lhs) models gather comm correctly
@@ -548,7 +578,8 @@ def transformer_graph(cfg: ArchConfig, shape: ShapeConfig,
         lse = b.act("lse", ("batch", "seq"), (B, S))
         b.g.reduce("loss:lse", logits, lse, axis="vocab")
         b._tag()
-        b.add_backward(logits)
+        b.add_backward(logits, master_fp32=master_fp32,
+                       error_feedback=error_feedback)
     return b.g
 
 
@@ -687,7 +718,10 @@ def decode_graph(cfg: ArchConfig, shape: ShapeConfig) -> Graph:
     return b.g
 
 
-def build_graph(cfg: ArchConfig, shape: ShapeConfig) -> Graph:
+def build_graph(cfg: ArchConfig, shape: ShapeConfig,
+                master_fp32: bool = False,
+                error_feedback: bool = False) -> Graph:
     if shape.kind == "decode":
         return decode_graph(cfg, shape)
-    return transformer_graph(cfg, shape)
+    return transformer_graph(cfg, shape, master_fp32=master_fp32,
+                             error_feedback=error_feedback)

@@ -644,10 +644,17 @@ def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
     """Attribute a composed tiling's predicted bytes to collective kinds
     and tensor roles, walking the same k-cut recursion as
     :func:`composed_cost` (totals match it exactly).  Returns
-    ``{"total", "by_kind", "by_role", "by_axis"}`` with bytes weighted by
-    groups_above(i) — i.e. system-wide wire bytes, directly comparable to
-    ``hlo.collect(...).wire_bytes_per_device × n_devices`` on the
-    compiled program (repro.verify.calibration)."""
+    ``{"total", "by_kind", "by_role", "by_axis", "by_phase"}`` with bytes
+    weighted by groups_above(i) — i.e. system-wide wire bytes, directly
+    comparable to ``hlo.collect(...).wire_bytes_per_device × n_devices``
+    on the compiled program (repro.verify.calibration).
+
+    ``by_phase`` splits the same total by op provenance (builder naming
+    convention): ``update`` = parameter-update ops (``upd:*``) — these
+    carry the ZeRO-style optimizer-state collectives (dW reduce-scatter
+    into the moment layout, bf16 weight all-gather after the sharded
+    update); ``backward`` = mirrored backward/grad-accumulation ops;
+    ``forward`` = everything else."""
     from .cost import op_cost_detail
     cur = g
     groups = 1
@@ -655,6 +662,15 @@ def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
     by_kind: Dict[str, float] = {}
     by_role: Dict[str, float] = {}
     by_axis: Dict[str, float] = {}
+    by_phase: Dict[str, float] = {}
+
+    def phase_of(op) -> str:
+        if op.name.startswith("upd:"):
+            return "update"
+        if op.name.startswith(("bwd:", "acc:", "seed:")):
+            return "backward"
+        return "forward"
+
     for ax, assign in zip(axes, per_axis):
         axis_total = 0.0
         for op in cur.ops:
@@ -662,6 +678,8 @@ def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
                     for t in cur.op_tensors(op)}
             c, recs = op_cost_detail(cur, op, full, ax.size)
             axis_total += c * groups
+            ph = phase_of(op)
+            by_phase[ph] = by_phase.get(ph, 0.0) + c * groups
             for r in recs:
                 b = r["bytes"] * groups
                 by_kind[r["kind"]] = by_kind.get(r["kind"], 0.0) + b
@@ -671,7 +689,7 @@ def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
         cur = cur.divided(assign, ax.size)
         groups *= ax.size
     return {"total": total, "by_kind": by_kind, "by_role": by_role,
-            "by_axis": by_axis}
+            "by_axis": by_axis, "by_phase": by_phase}
 
 
 def assignment_cost_naive(g: Graph, axes: Sequence[MeshAxis],

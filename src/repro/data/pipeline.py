@@ -7,6 +7,8 @@ elastic restarts re-partition cleanly."""
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 from typing import Dict, Iterator, Optional
 
 import jax
@@ -55,6 +57,87 @@ def batches(cfg: DataConfig, start_step: int = 0) -> Iterator[Dict[str,
     while True:
         yield host_batch(cfg, step)
         step += 1
+
+
+# ---------------------------------------------------------------------------
+# plan-sharded device feed (the training-engine input path)
+# ---------------------------------------------------------------------------
+
+class BatchFeed:
+    """Double-buffered, plan-sharded batch feed.
+
+    A background thread generates the host batch for step s+depth and
+    ``device_put``s it under the solved plan's batch shardings (one
+    committed array per input key — the jitted step never re-transfers or
+    re-shards its inputs) while the engine is still executing step s.
+    Without ``shardings`` the feed degrades to prefetched host arrays
+    (single-device runs).
+
+    Use as a context manager or call :meth:`close`; the producer thread
+    is a daemon either way."""
+
+    _STOP = object()
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0,
+                 shardings: Optional[Dict[str, object]] = None,
+                 depth: int = 2):
+        self.cfg = cfg
+        self.shardings = shardings
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(
+            target=self._produce, name="batch-feed", daemon=True)
+        self._thread.start()
+
+    def _place(self, batch: Dict[str, np.ndarray]) -> Dict[str, object]:
+        if self.shardings is None:
+            return dict(batch)
+        return {k: jax.device_put(v, self.shardings[k])
+                for k, v in batch.items()}
+
+    def _produce(self) -> None:
+        step = self._step
+        while not self._stop.is_set():
+            # a producer failure (e.g. device_put of a batch the plan's
+            # shardings cannot divide) must surface in get(), not hang
+            # the consumer on an empty queue forever
+            try:
+                item = (step, self._place(host_batch(self.cfg, step)))
+            except BaseException as e:   # noqa: BLE001 — re-raised in get
+                item = (step, e)
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            if isinstance(item[1], BaseException):
+                return
+            step += 1
+
+    def get(self) -> Dict[str, object]:
+        """Next step's device batch (blocks on the prefetch queue).
+        Re-raises any exception the producer thread hit."""
+        step, batch = self._q.get()
+        if isinstance(batch, BaseException):
+            raise batch
+        return batch
+
+    def __enter__(self) -> "BatchFeed":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        self._stop.set()
+        # drain so the producer's blocked put() can observe the stop flag
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
 
 
 # ---- stub modality frontends (assignment: [vlm]/[audio] backbones only) ---

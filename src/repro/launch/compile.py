@@ -50,14 +50,19 @@ def solve_cell_plan(cfg: ArchConfig, shape: ShapeConfig,
                     mesh_name: str,
                     use_cache: bool = True,
                     capacity: bool = False,
-                    beam="auto") -> Dict[str, Any]:
+                    beam="auto",
+                    graph_kwargs: Optional[Dict[str, Any]] = None
+                    ) -> Dict[str, Any]:
     """Solve (or load from cache) the tiling plan record for one cell on
-    explicit solver axes."""
+    explicit solver axes.  ``graph_kwargs`` are forwarded to
+    ``build_graph`` (the training engine solves with ``master_fp32`` /
+    ``error_feedback`` matching its runtime policy — callers must fold
+    the flags into ``mesh_name`` so cache entries stay distinct)."""
     path = plan_cache_path(cfg.name, shape.name, mesh_name)
     if use_cache and os.path.exists(path):
         with open(path) as f:
             return json.load(f)
-    g = build_graph(cfg, shape)
+    g = build_graph(cfg, shape, **(graph_kwargs or {}))
     t0 = time.time()
     if capacity:
         from ..core.solver import solve_mesh_capacity

@@ -1,84 +1,215 @@
-"""Training launcher.
+"""Training benchmark harness: drives the plan-driven training engine
+(repro.train) over the synthetic pipeline and reports tokens/s plus a
+step-time breakdown.
 
-Runs a real (CPU-sized or TPU) training job with the solver-derived
-sharding plan.  On this container use a reduced config + host-device
-mesh, e.g.:
-
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  # single device, reduced config:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
-      --reduced --steps 30 --mesh 4x2 --ckpt-dir /tmp/ckpt
+      --reduced --steps 30
+  # solver-plan sharded on a forced-host mesh (cached auto solve),
+  # microbatched with int8 error-feedback grad sync:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --steps 30 --mesh 4x2 --plan auto --microbatches 2 \
+      --grad-compression --ckpt-dir /tmp/ckpt
+  # elastic restart: re-run with --mesh 2x4 and the same --ckpt-dir —
+  # the checkpoint reshards onto the new mesh's solved tilings.
+
+Only stdlib at module level: --mesh forces the host device count via
+XLA_FLAGS, which must be set before jax initializes.
 """
 from __future__ import annotations
 
 import argparse
 import json
-
-import numpy as np
-
-from ..compat import make_compat_mesh, use_mesh
-from ..configs.base import SHAPES, get_arch
-from ..core.builders import transformer_graph
-from ..core.plan import ShardingPlan
-from ..core.solver import MeshAxis, solve_mesh
-from ..data.pipeline import DataConfig
-from ..models.model import LM
-from ..optim.adamw import AdamWConfig
-from ..runtime.train_loop import TrainConfig, train
-from ..configs.base import ShapeConfig
+import sys
+import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.train")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--warmup", type=int, default=2,
+                    help="steps excluded from throughput (jit compiles)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--mesh", default="",
-                    help="e.g. 4x2 => data=4, model=2 (needs host devices)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="e.g. 4x2 — forces host devices and builds a "
+                         "(data, model) mesh")
+    ap.add_argument("--plan", default=None, choices=("auto",),
+                    help="'auto' solves the train tiling for the mesh "
+                         "(cached) and shards params+opt state+batch")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--buckets", type=int, default=4)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--no-master-fp32", action="store_true",
+                    help="disable the f32 master copy (pure bf16 AdamW)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--min-step-tput", type=float, default=None,
+                    help="exit non-zero unless steady-state tokens/s "
+                         "exceeds this (CI smoke gate)")
+    return ap
+
+
+def main(argv=None) -> int:
+    ap = build_argparser()
+    args = ap.parse_args(argv)
+    mesh_shape = None
+    if args.plan and not args.mesh:
+        ap.error("--plan requires --mesh")
+    if args.mesh:
+        mesh_shape = tuple(int(s) for s in args.mesh.lower().split("x"))
+        n_dev = 1
+        for s in mesh_shape:
+            n_dev *= s
+        from ..hostdev import force_host_devices
+        force_host_devices(n_dev)
+
+    import jax
+
+    from ..configs.base import ShapeConfig, get_arch
+    from ..data.pipeline import BatchFeed, DataConfig
+    from ..models.model import LM
+    from ..optim.adamw import AdamWConfig
+    from ..train.engine import EngineConfig, TrainEngine
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    master_fp32 = not args.no_master_fp32
 
-    plan = None
-    mesh_ctx = None
-    if args.mesh:
-        nd, nm = (int(x) for x in args.mesh.split("x"))
-        mesh = make_compat_mesh((nd, nm), ("data", "model"))
-        shape = ShapeConfig("cli", args.seq, args.batch, "train")
-        g = transformer_graph(cfg, shape)
-        sol = solve_mesh(g, [MeshAxis("data", nd), MeshAxis("model", nm)],
-                         beam=4000)
-        plan = ShardingPlan.from_graph_solution(sol, g)
-        print("solver plan:")
-        print(plan.describe())
-        mesh_ctx = use_mesh(mesh)
+    plan = mesh = None
+    plan_rec = None
+    if mesh_shape:
+        from ..compat import make_compat_mesh
+        axis_names = ("data", "model")[:len(mesh_shape)]
+        mesh = make_compat_mesh(mesh_shape, axis_names)
+        if args.plan == "auto":
+            from .compile import plan_from_record, solve_cell_plan
+            from .mesh import mesh_to_solver_axes
+            axes = mesh_to_solver_axes(mesh)
+            tag = "r" if args.reduced else ""
+            shape = ShapeConfig(f"train{tag}{args.batch}x{args.seq}",
+                                args.seq, args.batch, "train")
+            flags = ("_mp" if master_fp32 else "") + \
+                ("_ef" if args.grad_compression else "")
+            t0 = time.time()
+            plan_rec = solve_cell_plan(
+                cfg, shape, axes, mesh_name=f"host{args.mesh}{flags}",
+                graph_kwargs={"master_fp32": master_fp32,
+                              "error_feedback": args.grad_compression})
+            plan = plan_from_record(plan_rec)
+            print(f"train plan ({time.time() - t0:.1f}s, cached solve "
+                  f"{plan_rec['solve_time']:.1f}s):")
+            print(plan.describe())
+        else:
+            print(f"note: --mesh {args.mesh} without --plan auto "
+                  f"trains UNSHARDED (no plan, no constraints)")
 
-    model = LM(cfg, plan=plan)
+    model = LM(cfg, plan=plan, mesh=mesh)
+    engine = TrainEngine(
+        model,
+        EngineConfig(microbatches=args.microbatches,
+                     buckets=args.buckets,
+                     grad_compression=args.grad_compression,
+                     master_fp32=master_fp32,
+                     optim=AdamWConfig(lr=args.lr,
+                                       total_steps=args.steps)),
+        mesh=mesh)
+
+    state = None
+    start = 0
+    if args.ckpt_dir:
+        restored = engine.restore(args.ckpt_dir)
+        if restored is not None:
+            state, _, start = restored
+            print(f"resumed from step {start} "
+                  f"({'resharded onto ' + args.mesh if mesh else 'host'})")
+    if state is None:
+        state = engine.init_state(jax.random.PRNGKey(args.seed))
+
     dcfg = DataConfig(seed=args.seed, vocab=cfg.vocab, seq_len=args.seq,
                       global_batch=args.batch)
-    tcfg = TrainConfig(
-        steps=args.steps, ckpt_every=args.ckpt_every,
-        ckpt_dir=args.ckpt_dir, grad_compression=args.grad_compression,
-        optim=AdamWConfig(lr=args.lr, total_steps=args.steps))
+    shardings = None
+    if mesh is not None and plan is not None:
+        shardings = engine.batch_shardings(("tokens", "labels"))
 
-    if mesh_ctx is not None:
-        with mesh_ctx:
-            out = train(model, dcfg, tcfg)
+    tokens_per_step = args.batch * args.seq
+    warmup = min(args.warmup, max(0, (args.steps - start) - 1))
+    hist = []
+    data_s = step_s = ckpt_s = 0.0
+    with BatchFeed(dcfg, start_step=start, shardings=shardings) as feed:
+        for step in range(start, args.steps):
+            ta = time.monotonic()
+            batch = feed.get()
+            tb = time.monotonic()
+            state, metrics = engine.step(state, batch)
+            loss = float(metrics["loss"])      # sync point
+            tc = time.monotonic()
+            if step - start >= warmup:
+                data_s += tb - ta
+                step_s += tc - tb
+            hist.append({"step": step, "loss": loss, "sec": tc - ta})
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                engine.save(args.ckpt_dir, step + 1, state,
+                            extra={"loss": loss})
+                from ..checkpoint import ckpt
+                ckpt.gc_old(args.ckpt_dir)
+                ckpt_s += time.monotonic() - tc
+
+    n_meas = max(1, len(hist) - warmup)
+    mean_step = step_s / n_meas
+    tput = tokens_per_step / mean_step if step_s else 0.0
+    rec = {
+        "meta": {
+            "arch": cfg.name, "reduced": args.reduced,
+            "batch": args.batch, "seq": args.seq,
+            "steps": len(hist), "microbatches": args.microbatches,
+            "buckets": args.buckets,
+            "grad_compression": args.grad_compression,
+            "master_fp32": master_fp32,
+            "mesh": args.mesh, "plan": args.plan,
+            "n_devices": jax.device_count(),
+        },
+        "first_loss": hist[0]["loss"] if hist else None,
+        "last_loss": hist[-1]["loss"] if hist else None,
+        "tokens_per_step": tokens_per_step,
+        "mean_step_s": mean_step,
+        "tokens_per_s": tput,
+        "breakdown_s": {"data": data_s, "step": step_s, "ckpt": ckpt_s},
+        "predicted_wire_bytes": (plan_rec or {}).get("total_bytes"),
+    }
+    if hist:
+        print(f"{len(hist)} steps, loss {rec['first_loss']:.3f} -> "
+              f"{rec['last_loss']:.3f}")
+        print(f"  throughput {tput:,.1f} tok/s "
+              f"(mean step {mean_step * 1e3:.1f} ms over {n_meas} steps)")
     else:
-        out = train(model, dcfg, tcfg)
-    hist = out["history"]
-    print(json.dumps({"first_loss": hist[0]["loss"],
-                      "last_loss": hist[-1]["loss"],
-                      "steps": len(hist)}))
+        print(f"nothing to do: resumed at step {start} >= "
+              f"--steps {args.steps}")
+    print(f"  breakdown  data {data_s:.2f}s | step {step_s:.2f}s | "
+          f"ckpt {ckpt_s:.2f}s")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"metrics -> {args.json_out}")
+
+    if args.min_step_tput is not None:
+        if not hist:
+            print("step throughput gate skipped (no steps ran)")
+            return 0
+        if tput < args.min_step_tput:
+            print(f"FAIL: step throughput {tput} < {args.min_step_tput}")
+            return 1
+        print(f"step throughput gate ok "
+              f"({tput:.1f} >= {args.min_step_tput})")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -63,8 +63,14 @@ def _match(path: str, rules) -> Optional[Tuple[str, Tuple[str, ...]]]:
     return None
 
 
-def leaf_pspec(plan, path: str, ndim: int, rules=RULES) -> P:
-    """PartitionSpec for one param leaf (handles the stacked [L] axis)."""
+def leaf_pspec(plan, path: str, ndim: int, rules=RULES,
+               suffixes: Tuple[str, ...] = ()) -> P:
+    """PartitionSpec for one param leaf (handles the stacked [L] axis).
+    ``suffixes``: derived-state lookup — the first ``role + suffix``
+    present in the plan wins (e.g. ``wq.opt`` for optimizer moments),
+    with the weight role itself as the final fallback (derived state
+    follows its weight when the solve predates the optimizer-state
+    graph extension)."""
     m = _match(path, rules)
     if m is None or plan is None:
         return P()
@@ -74,17 +80,21 @@ def leaf_pspec(plan, path: str, ndim: int, rules=RULES) -> P:
         dims = ("layer",) * extra + tuple(dims)
     elif extra < 0:
         dims = tuple(dims)[-ndim:] if ndim else ()
+    for s in suffixes:
+        if plan.has_role(role + s):
+            return plan.pspec(role + s, dims)
     return plan.pspec(role, dims, default=P())
 
 
-def tree_pspecs(plan, tree: PyTree, rules=RULES) -> PyTree:
+def tree_pspecs(plan, tree: PyTree, rules=RULES,
+                suffixes: Tuple[str, ...] = ()) -> PyTree:
     flat = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         nd = getattr(leaf, "ndim", np.ndim(leaf))
-        out.append(leaf_pspec(plan, key, nd, rules))
+        out.append(leaf_pspec(plan, key, nd, rules, suffixes))
     return jax.tree_util.tree_unflatten(flat[1], out)
 
 

@@ -1,2 +1,2 @@
-from .train_loop import TrainConfig, make_train_step, train
+from .train_loop import TrainConfig, make_engine, train
 from .serve import ServeConfig, Server

@@ -1,10 +1,17 @@
-"""Fault-tolerant training loop.
+"""Fault-tolerant training loop — a thin driver over the plan-driven
+training engine (repro.train.engine; the seed's monolithic step lives on
+only through this module's public API).
 
-- jitted train_step = loss + grad + (optional int8 error-feedback grad
-  compression) + AdamW, with solver-plan shardings on params & batch.
+- jitted, donated engine step: microbatch gradient accumulation,
+  bucketed gradient sync, optional int8 error-feedback compression,
+  bf16-compute/f32-master mixed precision, solver-plan shardings on
+  params, optimizer state AND the input batch (data/pipeline.BatchFeed
+  double-buffers the host->device path).
 - periodic atomic checkpoints; on start, auto-resume from the latest
   committed step — the resume-equivalence test asserts a killed+resumed
-  run reproduces the uninterrupted loss trajectory bit-exactly.
+  run reproduces the uninterrupted loss trajectory bit-exactly.  The
+  checkpoint carries the full engine state (params / master / m / v /
+  err) and restores elastically onto a different mesh.
 - straggler mitigation hook: per-step wall-clock watchdog; in a real
   multi-host deployment the callback triggers re-dispatch/preemption of
   the slow host (here it logs — single-process container).
@@ -15,17 +22,11 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from ..checkpoint import ckpt
-from ..configs.base import ArchConfig
-from ..data.pipeline import DataConfig, host_batch
+from ..data.pipeline import BatchFeed, DataConfig
 from ..models.model import LM
-from ..optim.adamw import AdamWConfig, apply_updates, init_state
-from ..optim.compression import (compress_grads, decompress_grads,
-                                 init_error)
+from ..optim.adamw import AdamWConfig
+from ..train.engine import EngineConfig, TrainEngine
 
 PyTree = Any
 
@@ -39,65 +40,72 @@ class TrainConfig:
     grad_compression: bool = False
     straggler_timeout_s: Optional[float] = None
     optim: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    # engine knobs (repro.train.engine)
+    microbatches: int = 1
+    buckets: int = 4
+    master_fp32: bool = True
 
 
-def make_train_step(model: LM, tcfg: TrainConfig):
-    """Returns jittable (params, opt_state, err, batch) -> (...)"""
-
-    def step_fn(params, opt_state, err, batch):
-        loss, grads = jax.value_and_grad(model.loss)(params, batch)
-        if tcfg.grad_compression:
-            comp, err = compress_grads(grads, err)
-            grads = decompress_grads(comp)
-        params, opt_state, gnorm = apply_updates(
-            params, grads, opt_state, tcfg.optim)
-        return params, opt_state, err, loss, gnorm
-
-    return step_fn
+def make_engine(model: LM, tcfg: TrainConfig, mesh=None) -> TrainEngine:
+    return TrainEngine(
+        model,
+        EngineConfig(microbatches=tcfg.microbatches,
+                     buckets=tcfg.buckets,
+                     grad_compression=tcfg.grad_compression,
+                     master_fp32=tcfg.master_fp32,
+                     optim=tcfg.optim),
+        mesh=mesh)
 
 
 def train(model: LM, dcfg: DataConfig, tcfg: TrainConfig,
           params: Optional[PyTree] = None,
           in_shardings=None,
           straggler_cb: Optional[Callable[[int, float], None]] = None,
+          mesh=None,
           ) -> Dict[str, Any]:
     """Run (or resume) training.  Returns history + final state."""
-    key = jax.random.PRNGKey(dcfg.seed)
-    if params is None:
-        params = model.init(key)
-    opt_state = init_state(params)
-    err = init_error(params) if tcfg.grad_compression else 0
+    import jax
+
+    engine = make_engine(model, tcfg, mesh=mesh)
+    state = None
     start = 0
-
     if tcfg.ckpt_dir:
-        last = ckpt.latest_step(tcfg.ckpt_dir)
-        if last is not None:
-            state = {"params": params, "opt": opt_state, "err": err}
-            state, extra = ckpt.restore(tcfg.ckpt_dir, last, state)
-            params, opt_state, err = (state["params"], state["opt"],
-                                      state["err"])
-            start = last
+        restored = engine.restore(tcfg.ckpt_dir)
+        if restored is not None:
+            state, _, start = restored
+    if state is None:
+        state = engine.init_state(jax.random.PRNGKey(dcfg.seed))
+        if params is not None:
+            import jax.numpy as jnp
+            state["params"] = params
+            if tcfg.master_fp32:
+                state["master"] = jax.tree_util.tree_map(
+                    lambda p: jnp.array(p, jnp.float32, copy=True),
+                    params)
 
-    step_fn = jax.jit(make_train_step(model, tcfg),
-                      donate_argnums=(0, 1, 2))
+    shardings = None
+    if engine.mesh is not None and engine.plan is not None:
+        shardings = engine.batch_shardings(("tokens", "labels"))
+
     history: List[Dict[str, float]] = []
-    for step in range(start, tcfg.steps):
-        t0 = time.monotonic()
-        batch = {k: jnp.asarray(v)
-                 for k, v in host_batch(dcfg, step).items()}
-        params, opt_state, err, loss, gnorm = step_fn(
-            params, opt_state, err, batch)
-        loss = float(loss)
-        dt = time.monotonic() - t0
-        if (tcfg.straggler_timeout_s is not None
-                and dt > tcfg.straggler_timeout_s):
-            if straggler_cb is not None:
-                straggler_cb(step, dt)
-        history.append({"step": step, "loss": loss, "sec": dt,
-                        "gnorm": float(gnorm)})
-        if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
-            ckpt.save(tcfg.ckpt_dir, step + 1,
-                      {"params": params, "opt": opt_state, "err": err},
-                      extra={"loss": loss})
-            ckpt.gc_old(tcfg.ckpt_dir)
-    return {"params": params, "opt": opt_state, "history": history}
+    tokens_per_step = dcfg.global_batch * dcfg.seq_len
+    with BatchFeed(dcfg, start_step=start, shardings=shardings) as feed:
+        for step in range(start, tcfg.steps):
+            t0 = time.monotonic()
+            batch = feed.get()
+            state, metrics = engine.step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            if (tcfg.straggler_timeout_s is not None
+                    and dt > tcfg.straggler_timeout_s):
+                if straggler_cb is not None:
+                    straggler_cb(step, dt)
+            history.append({"step": step, "loss": loss, "sec": dt,
+                            "gnorm": float(metrics["gnorm"]),
+                            "tok_per_s": tokens_per_step / max(dt, 1e-9)})
+            if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
+                engine.save(tcfg.ckpt_dir, step + 1, state,
+                            extra={"loss": loss})
+                ckpt.gc_old(tcfg.ckpt_dir)
+    return {"params": state["params"], "opt": state["opt"],
+            "state": state, "engine": engine, "history": history}

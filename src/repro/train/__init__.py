@@ -1,0 +1,4 @@
+"""Plan-driven distributed training engine (DESIGN.md §12)."""
+from .engine import EngineConfig, TrainEngine, params_of
+
+__all__ = ["EngineConfig", "TrainEngine", "params_of"]

@@ -58,6 +58,8 @@ def main(argv=None) -> int:
         print(f"{'serve':16s} {'(engine cell)':22s} {'dense':12s} serve")
         print(f"{'trace':16s} {'(frontend cell)':22s} {'3 families':12s}"
               f" trace")
+        print(f"{'train-engine':16s} {'(engine cell)':22s} {'dense':12s}"
+              f" train")
         return 0
 
     import jax
@@ -81,19 +83,22 @@ def main(argv=None) -> int:
             "abs_floor_bytes": ABS_FLOOR,
             "dp_slack": DP_SLACK,
         }
-        # "serve" (continuous-batching engine) and "trace" (jaxpr
-        # frontend) are pseudo-cells, not phase cells: in the default
-        # all-cells run and selectable by name next to the phase cells
+        # "serve" (continuous-batching engine), "trace" (jaxpr frontend)
+        # and "train-engine" (training engine) are pseudo-cells, not
+        # phase cells: in the default all-cells run and selectable by
+        # name next to the phase cells
         names = args.cells.split(",") if args.cells else None
         # the serve cell is a pure numerics check, so --no-numerics
         # skips it too
         with_serve = (names is None or "serve" in names) \
             and not args.no_numerics
         with_trace = names is None or "trace" in names
+        with_train = names is None or "train-engine" in names
         if names is None:
             specs = get_cells(None)
         else:
-            names = [n for n in names if n not in ("serve", "trace")]
+            names = [n for n in names
+                     if n not in ("serve", "trace", "train-engine")]
             specs = get_cells(names) if names else []
         mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
         recs = run_cells(specs, mesh, numerics=not args.no_numerics,
@@ -114,6 +119,21 @@ def main(argv=None) -> int:
                       f"({time.time() - t0:.0f}s)", flush=True)
                 if srec["status"] == "error":
                     print(srec["traceback"], flush=True)
+        if with_train:
+            from .train_cell import run_train_cell
+            t0 = time.time()
+            trec = run_train_cell(mesh, numerics=not args.no_numerics)
+            report["train_engine"] = trec
+            ok &= trec["status"] == "ok"
+            if not args.json:
+                cal = trec.get("calibration", {})
+                print(f"[{trec['status']}] {'train-engine':16s} "
+                      f"ratio={cal.get('ratio', float('nan')):.2f} "
+                      f"dloss={trec.get('trajectory', {}).get('max_abs_dloss')} "
+                      f"accum={trec.get('accumulation', {}).get('max_abs_dloss')} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+                if trec["status"] == "error":
+                    print(trec["traceback"], flush=True)
         if with_trace:
             from .trace_cell import run_trace_cell
             t0 = time.time()
