@@ -26,7 +26,7 @@ conversion into one of them:
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 from .graph import Graph, OpSpec
 from .tiling import (REDUCED, REPLICATE, Part, Tiling, conversion_cost,
@@ -391,11 +391,19 @@ def memory_penalties(g: Graph, arity: int, scale: float = 1.0,
 
 
 def graph_cost(g: Graph, assign: Assignment, arity: int,
-               naive: bool = False, mem_scale: float = 0.0) -> float:
-    """Total one-cut cost of a full assignment (Eq. 3) + capacity term."""
+               naive: bool = False, mem_scale: float = 0.0,
+               terms: Sequence = ()) -> float:
+    """Total one-cut cost of a full assignment (Eq. 3) + cost terms.
+
+    ``terms`` are costterms.CostTerm instances (duck-typed here to avoid
+    a cycle); ``mem_scale`` remains sugar for the capacity term so every
+    existing caller prices exactly what it did before."""
     total = sum(op_cost(g, op, assign, arity, naive) for op in g.ops)
     if mem_scale:
         pen = memory_penalties(g, arity, mem_scale)
         for t, per in pen.items():
+            total += per.get(assign.get(t, REPLICATE), 0.0)
+    for term in terms:
+        for t, per in term.penalties(g, arity).items():
             total += per.get(assign.get(t, REPLICATE), 0.0)
     return total

@@ -1,0 +1,157 @@
+"""Pluggable cost terms for the tiling DP (carved out of core/solver.py).
+
+The one-cut DP's native objective is conversion wire bytes (the op cost
+tables of cost.py).  Everything else the search trades off against those
+bytes is a *cost term*: a per-tensor, per-tiling additive penalty charged
+once when the DP assigns that tensor.  Before this module the solver had
+exactly one such term hard-wired (the soft-capacity Lagrangian of
+``memory_penalties``); the joint pipeline-stage search adds a second, so
+the interface is now explicit:
+
+  CapacityTerm          the soft-capacity Lagrangian λ_kind × per-device
+                        bytes (wraps cost.memory_penalties; this is what
+                        ``mem_scale`` constructs inside solve_one_cut)
+  BoundaryTransferTerm  stage-boundary transfer priced on the stage link
+                        (DCN vs ICI): the per-axis-exact decomposition of
+                        the boundary wire bytes — see below
+  TensorPenaltyTerm     an explicit {tensor: {tiling: cost}} table, for
+                        tests and ad-hoc pins
+
+The DP's dominance pruning assumes penalties are >= 0; every term must
+honor that.
+
+Boundary-transfer decomposition
+-------------------------------
+A tensor crossing a pipeline-stage cut is sent point-to-point between
+peer devices of adjacent stage groups.  Each of the ``inner_degree``
+devices in a stage group ships its local shard, so the system-wide wire
+bytes over the cut are
+
+    T = mult × nbytes × Π_{axis k where t is NOT partitioned} a_k
+
+(fully partitioned: T = nbytes; fully replicated: every device ships the
+whole tensor).  Along the k-cut recursion — where axis k sees the tensor
+already divided to ``s_k`` bytes by the previous axes' Part choices and
+carries the ``groups_k = Π_{j<k} a_j`` weighting — this telescopes
+*exactly* into per-axis charges
+
+    T = mult × nbytes  +  Σ_k [choice_k is not Part] ×
+                           mult × s_k × groups_k × (a_k − 1)
+
+with the first term assignment-independent.  ``BoundaryTransferTerm``
+charges one axis' slice of that sum, pre-scaled into the axis' native
+byte currency (one axis-k byte is worth 1/(bw_k × a_k) seconds in the
+solve_mesh accounting, one boundary byte 1/(stage_bw × inner_degree)
+seconds over the parallel stage links), so the one-cut DP trades
+intra-stage conversion bytes against stage-link transfer seconds at the
+correct exchange rate.
+
+The 1F1B bubble is not a per-tensor penalty — it is a schedule-level
+multiplier on the critical stage time — but it lives here (BubbleTerm)
+so every knob of the pipeline cost model is declared in one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Sequence
+
+from .cost import memory_penalties, tensor_tiling_choices
+from .graph import Graph
+from .tiling import Part, Tiling
+
+PenaltyTable = Dict[str, Dict[Tiling, float]]
+
+
+class CostTerm:
+    """One additive cost term of the tiling DP.
+
+    ``penalties(g, arity)`` returns {tensor: {tiling: cost >= 0}} charged
+    once when the DP assigns that tensor, in the same currency as the
+    op-conversion cost tables of the cut being solved."""
+
+    name = "term"
+
+    def penalties(self, g: Graph, arity: int) -> PenaltyTable:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class CapacityTerm(CostTerm):
+    """Soft-capacity Lagrangian (the pre-existing ``mem_scale`` term)."""
+
+    scale: float = 1.0
+    hbm: float = 16e9
+    name = "capacity"
+
+    def penalties(self, g: Graph, arity: int) -> PenaltyTable:
+        if not self.scale:
+            return {}
+        return memory_penalties(g, arity, self.scale, self.hbm)
+
+
+@dataclasses.dataclass
+class TensorPenaltyTerm(CostTerm):
+    """Explicit per-tensor penalty table (tests / ad-hoc pins)."""
+
+    table: PenaltyTable
+    name = "table"
+
+    def penalties(self, g: Graph, arity: int) -> PenaltyTable:
+        return {t: per for t, per in self.table.items() if t in g.tensors}
+
+
+@dataclasses.dataclass
+class BoundaryTransferTerm(CostTerm):
+    """One inner axis' slice of the stage-boundary transfer cost.
+
+    ``weights``: {tensor: w} with w = mult × groups_k × bw_k × a_k /
+    (stage_bw × inner_degree) — everything about the axis and the stage
+    link folded into one scalar by the stage solver, so the charge here
+    is simply w × current_bytes × (arity − 1) for every non-Part choice
+    (Part ships a strictly smaller shard and is charged downstream on
+    the later axes' s_k, per the exact telescoping above)."""
+
+    weights: Mapping[str, float]
+    name = "stage-boundary"
+
+    def penalties(self, g: Graph, arity: int) -> PenaltyTable:
+        out: PenaltyTable = {}
+        for t, w in self.weights.items():
+            ts = g.tensors.get(t)
+            if ts is None or not w:
+                continue
+            excess = w * ts.nbytes * (arity - 1)
+            out[t] = {c: (0.0 if isinstance(c, Part) else excess)
+                      for c in tensor_tiling_choices(g, t, arity)}
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BubbleTerm:
+    """1F1B / GPipe bubble: with S stages and n_micro microbatches the
+    schedule runs n_micro + S − 1 stage-times to drain, so the step pays
+
+        factor(S) = (n_micro + S − 1) / n_micro = 1 + (S − 1)/n_micro
+
+    times the critical (slowest) stage time.  1F1B shares GPipe's bubble
+    count — what it improves is activation memory, which the per-stage
+    capacity term sees through the stage subgraphs."""
+
+    n_micro: int
+
+    def factor(self, n_stages: int) -> float:
+        if n_stages <= 1:
+            return 1.0
+        return (self.n_micro + n_stages - 1) / float(self.n_micro)
+
+
+def combined_penalties(g: Graph, arity: int,
+                       terms: Sequence[CostTerm]) -> PenaltyTable:
+    """Sum the terms' penalty tables (per tensor, per tiling)."""
+    merged: PenaltyTable = {}
+    for term in terms:
+        for t, per in term.penalties(g, arity).items():
+            dst = merged.setdefault(t, {})
+            for c, v in per.items():
+                dst[c] = dst.get(c, 0.0) + v
+    return merged

@@ -60,7 +60,8 @@ def solve_one_cut(g: Graph, arity: int,
                   beam: BeamSpec = "auto",
                   mem_scale: float = 1.0,
                   optimize: bool = True,
-                  cost_cache: Optional[dict] = None) -> OneCutSolution:
+                  cost_cache: Optional[dict] = None,
+                  terms: Sequence = ()) -> OneCutSolution:
     """Optimal (or beam-pruned) one-cut tiling of graph ``g`` across
     ``arity`` device groups.  Exact variable-elimination DP over the
     layer-group op order; tilings are interned to small ints for speed.
@@ -71,13 +72,37 @@ def solve_one_cut(g: Graph, arity: int,
     the cap).  ``optimize=False`` runs the unmemoized, unpruned seed
     implementation — kept callable as the baseline for
     benchmarks/solver_bench.py.  ``cost_cache`` shares memoized per-op
-    cost tables across calls (e.g. across the k-cut recursion)."""
+    cost tables across calls (e.g. across the k-cut recursion).
+
+    ``terms``: extra costterms.CostTerm penalties charged next to the op
+    tables (``mem_scale`` stays sugar for the capacity term).  Penalties
+    must be >= 0 — dominance pruning relies on it.  They live outside the
+    memoized cost tables, so a shared ``cost_cache`` stays valid across
+    calls with different terms."""
     if arity <= 1:
         return OneCutSolution(0.0, {t: REPLICATE for t in g.tensors})
     if not optimize:
         b = 50_000 if isinstance(beam, str) else beam
-        return _solve_one_cut_seed(g, arity, fixed, b, mem_scale)
-    return _solve_one_cut_fast(g, arity, fixed, beam, mem_scale, cost_cache)
+        return _solve_one_cut_seed(g, arity, fixed, b, mem_scale, terms)
+    return _solve_one_cut_fast(g, arity, fixed, beam, mem_scale, cost_cache,
+                               terms)
+
+
+def _term_penalties(g: Graph, arity: int, mem_scale: float,
+                    terms: Sequence) -> Dict[str, Dict[Tiling, float]]:
+    """The DP's merged per-tensor penalty table: capacity (mem_scale
+    sugar) plus any explicit cost terms."""
+    pen = memory_penalties(g, arity, mem_scale) if mem_scale else {}
+    if terms:
+        from .costterms import combined_penalties
+        extra = combined_penalties(g, arity, terms)
+        if extra:
+            pen = {t: dict(per) for t, per in pen.items()}
+            for t, per in extra.items():
+                dst = pen.setdefault(t, {})
+                for c, v in per.items():
+                    dst[c] = dst.get(c, 0.0) + v
+    return pen
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +111,8 @@ def solve_one_cut(g: Graph, arity: int,
 
 def _solve_one_cut_fast(g: Graph, arity: int, fixed: Optional[Assignment],
                         beam: BeamSpec, mem_scale: float,
-                        cost_cache: Optional[dict]) -> OneCutSolution:
+                        cost_cache: Optional[dict],
+                        terms: Sequence = ()) -> OneCutSolution:
     fixed = fixed or {}
     order = g.elimination_order()
     names = list(g.tensors)
@@ -103,7 +129,7 @@ def _solve_one_cut_fast(g: Graph, arity: int, fixed: Optional[Assignment],
         for t in g.op_tensors(op):
             last_use[tid[t]] = i
 
-    pen = memory_penalties(g, arity, mem_scale) if mem_scale else {}
+    pen = _term_penalties(g, arity, mem_scale, terms)
     pen_by_id: Dict[int, List[float]] = {}
     for t, per in pen.items():
         j = tid[t]
@@ -282,7 +308,8 @@ def _run_dp(steps, n_choice, pen_by_id, tb_by_id, beam: Optional[int],
 def _solve_one_cut_seed(g: Graph, arity: int,
                         fixed: Optional[Assignment] = None,
                         beam: Optional[int] = 50_000,
-                        mem_scale: float = 1.0) -> OneCutSolution:
+                        mem_scale: float = 1.0,
+                        terms: Sequence = ()) -> OneCutSolution:
     fixed = fixed or {}
     order = g.elimination_order()
 
@@ -299,8 +326,8 @@ def _solve_one_cut_seed(g: Graph, arity: int,
         for t in g.op_tensors(op):
             last_use[tid[t]] = i
 
-    # soft-capacity penalties, charged once when a tensor is assigned
-    pen = memory_penalties(g, arity, mem_scale) if mem_scale else {}
+    # soft-capacity + cost-term penalties, charged once per assignment
+    pen = _term_penalties(g, arity, mem_scale, terms)
     pen_by_id = {}
     for t, per in pen.items():
         j = tid[t]
@@ -377,11 +404,11 @@ def _solve_one_cut_seed(g: Graph, arity: int,
 def _bruteforce_chunk(payload) -> Tuple[float, Optional[Assignment]]:
     """Worker for the parallel oracle: exhaust the sub-product where the
     pivot tensor is pinned to one choice (top-level for pickling)."""
-    g, arity, names, choice_lists, mem_scale = payload
+    g, arity, names, choice_lists, mem_scale, terms = payload
     best: Tuple[float, Optional[Assignment]] = (float("inf"), None)
     for combo in itertools.product(*choice_lists):
         assign = dict(zip(names, combo))
-        c = graph_cost(g, assign, arity, mem_scale=mem_scale)
+        c = graph_cost(g, assign, arity, mem_scale=mem_scale, terms=terms)
         if c < best[0]:
             best = (c, assign)
     return best
@@ -390,7 +417,8 @@ def _bruteforce_chunk(payload) -> Tuple[float, Optional[Assignment]]:
 def solve_one_cut_bruteforce(g: Graph, arity: int,
                              fixed: Optional[Assignment] = None,
                              mem_scale: float = 1.0,
-                             workers: Optional[int] = None) -> OneCutSolution:
+                             workers: Optional[int] = None,
+                             terms: Sequence = ()) -> OneCutSolution:
     """Exhaustive reference solver (the optimality oracle for tests and
     benchmarks).  ``workers``: fan the assignment product out over
     processes with concurrent.futures (0/None on small products = serial);
@@ -412,7 +440,7 @@ def solve_one_cut_bruteforce(g: Graph, arity: int,
         for c in choice_lists[pivot]:
             sub = list(choice_lists)
             sub[pivot] = [c]
-            jobs.append((g, arity, names, sub, mem_scale))
+            jobs.append((g, arity, names, sub, mem_scale, terms))
         try:
             from concurrent.futures import ProcessPoolExecutor
             from concurrent.futures.process import BrokenProcessPool
@@ -424,7 +452,8 @@ def solve_one_cut_bruteforce(g: Graph, arity: int,
             return OneCutSolution(best[0], best[1])
         except (OSError, BrokenProcessPool):  # no process pool: serial
             pass
-    best = _bruteforce_chunk((g, arity, names, choice_lists, mem_scale))
+    best = _bruteforce_chunk((g, arity, names, choice_lists, mem_scale,
+                              terms))
     assert best[1] is not None
     return OneCutSolution(best[0], best[1])
 
@@ -764,3 +793,536 @@ def canonical_mp_assignment(g: Graph) -> Assignment:
         else:
             out[name] = REPLICATE
     return out
+
+
+# ---------------------------------------------------------------------------
+# joint pipeline-stage + tiling search (bubble-aware; ROADMAP item 1)
+# ---------------------------------------------------------------------------
+# Pipelining is *outside* the tiling space (DESIGN.md §5): no PartitionSpec
+# expresses "layers 0..k on these devices".  So the search is lifted one
+# level: choose contiguous layer-block ranges as stages, carve a ``stage``
+# axis off the slowest mesh axis, and tile each stage's subgraph over the
+# remaining (inner) axes with the existing one-cut DP — extended with a
+# BoundaryTransferTerm so intra-stage conversion bytes and stage-link
+# transfer seconds trade off inside one objective.  The schedule-level
+# bubble multiplies the critical stage (costterms.BubbleTerm), giving
+#
+#   T(cuts, tilings) = (n_micro + S - 1)/n_micro × max_s τ_s
+#   τ_s = comm_s(tilings_s) + flops_s/(peak × inner_degree)
+#         + boundary_bytes_s(tilings_s)/(stage_bw × inner_degree)
+#
+# τ_s depends only on stage s' own range and tilings (boundary bytes are
+# charged to the *consumer* stage), so min over cuts of the max is an
+# exact interval DP: dp[j][s] = min_i max(dp[i][s-1], τ(i, j)).
+
+# a weight/opt tensor straddling a cut needs its gradient synced across
+# the stage link every step, both directions — priced at 2× the one-way
+# activation transfer (ring all-reduce ≈ 2 × bytes on the wire).
+PIPE_WEIGHT_XFER_MULT = 2.0
+# default modeled compute rate (launch.mesh.PEAK_FLOPS; duplicated here
+# because core/ must not import launch/)
+DEFAULT_PEAK_FLOPS = 197e12
+
+
+def layer_blocks(g: Graph) -> List[List[OpSpec]]:
+    """Ops grouped into layer blocks by the builders' ``group`` tags
+    (backward/update ops carry their forward op's tag, so one block holds
+    a layer's forward, backward AND update work).  Untagged ops land in
+    group 0; a graph with no tags is one block (S=1 only)."""
+    by_group: Dict[int, List[OpSpec]] = {}
+    for op in g.ops:
+        by_group.setdefault(int(op.attrs.get("group", 0)), []).append(op)
+    return [by_group[k] for k in sorted(by_group)]
+
+
+def _block_spans(g: Graph, blocks: Sequence[Sequence[OpSpec]]
+                 ) -> Dict[str, Tuple[int, int]]:
+    """tensor -> (first, last) block index touching it; custom-op aligned
+    forms count as touches (their penalties reference those tensors)."""
+    spans: Dict[str, Tuple[int, int]] = {}
+    for bi, ops in enumerate(blocks):
+        for op in ops:
+            names = list(g.op_tensors(op))
+            if op.kind == "custom":
+                for form, _pen in op.attrs["forms"]:
+                    names.extend(form)
+            for t in names:
+                if t not in g.tensors:
+                    continue
+                lo, hi = spans.get(t, (bi, bi))
+                spans[t] = (min(lo, bi), max(hi, bi))
+    return spans
+
+
+def crossing_tensors(spans: Dict[str, Tuple[int, int]],
+                     cut: int) -> List[str]:
+    """Tensors live across cut ``cut`` (between blocks cut-1 and cut)."""
+    return sorted(t for t, (lo, hi) in spans.items() if lo < cut <= hi)
+
+
+def stage_subgraph(g: Graph, blocks: Sequence[Sequence[OpSpec]],
+                   lo: int, hi: int) -> Graph:
+    """Subgraph of blocks [lo, hi): shares OpSpec/TensorSpec objects with
+    ``g`` (same trick as Graph.divided), holding exactly the tensors its
+    ops (and their custom forms) touch."""
+    sub = Graph(f"{g.name}[{lo}:{hi}]", g.allow_uneven)
+    for ops in blocks[lo:hi]:
+        sub.ops.extend(ops)
+    needed: List[str] = []
+    for op in sub.ops:
+        needed.extend(g.op_tensors(op))
+        if op.kind == "custom":
+            for form, _pen in op.attrs["forms"]:
+                needed.extend(form)
+    for t in dict.fromkeys(needed):
+        if t in g.tensors:
+            sub.tensors[t] = g.tensors[t]
+    return sub
+
+
+def _boundary_mult(ts) -> float:
+    return PIPE_WEIGHT_XFER_MULT if ts.kind in ("weight", "opt") else 1.0
+
+
+@dataclasses.dataclass
+class StageSolution:
+    """One pipeline stage: its block range, subgraph, inner-axis tilings
+    and the three components of its full-batch stage time."""
+
+    lo: int
+    hi: int
+    graph: Graph
+    per_axis: List[Assignment]
+    incoming: List[str]             # tensors crossing the inbound cut
+    comm_seconds: float             # intra-stage conversions (+ capacity λ)
+    compute_seconds: float
+    boundary_seconds: float
+    boundary_bytes: Dict[str, float]   # per inbound tensor, wire bytes
+    exact: bool = True
+
+    @property
+    def seconds(self) -> float:
+        return self.comm_seconds + self.compute_seconds + \
+            self.boundary_seconds
+
+    @property
+    def boundary_bytes_total(self) -> float:
+        return sum(self.boundary_bytes.values())
+
+
+@dataclasses.dataclass
+class PipelineSolution:
+    """Joint stage-cut + per-stage tiling choice for one mesh."""
+
+    axes: List[MeshAxis]            # original solver axes (slowest first)
+    n_micro: int
+    n_stages: int
+    stage_axis: Optional[MeshAxis]  # None when n_stages == 1
+    inner_axes: List[MeshAxis]      # per-stage tiling axes
+    stages: List[StageSolution]
+    bubble_factor: float
+    total_seconds: float            # bubble × max stage seconds
+    candidates: Dict[int, float]    # stage count -> total seconds
+    mem_scale: float
+    peak_flops: float
+    exact: bool
+
+    @property
+    def cuts(self) -> List[int]:
+        return [s.lo for s in self.stages] + [self.stages[-1].hi]
+
+    @property
+    def flat(self) -> bool:
+        return self.n_stages == 1
+
+    @property
+    def critical_seconds(self) -> float:
+        return max(s.seconds for s in self.stages)
+
+    def describe(self) -> str:
+        lines = [f"stages={self.n_stages} bubble={self.bubble_factor:.3f} "
+                 f"n_micro={self.n_micro} "
+                 f"modeled={self.total_seconds * 1e3:.3f} ms"]
+        for i, st in enumerate(self.stages):
+            lines.append(
+                f"  stage {i}: blocks [{st.lo},{st.hi}) "
+                f"comm={st.comm_seconds * 1e3:.3f}ms "
+                f"compute={st.compute_seconds * 1e3:.3f}ms "
+                f"boundary={st.boundary_seconds * 1e3:.3f}ms "
+                f"({st.boundary_bytes_total:.2e} B in)")
+        return "\n".join(lines)
+
+
+def pipeline_stage_options(axes: Sequence[MeshAxis]
+                           ) -> List[Tuple[int, Optional[MeshAxis],
+                                           List[MeshAxis]]]:
+    """Candidate (n_stages, stage_axis, inner_axes) splits.  The stage
+    axis is carved from the outermost (slowest) axis — that is where
+    point-to-point boundary hops beat collective sync — keeping its
+    bandwidth for the stage link: every divisor of the outer size, then
+    (outer fully consumed) products into divisors of the second axis."""
+    opts: List[Tuple[int, Optional[MeshAxis], List[MeshAxis]]] = [
+        (1, None, list(axes))]
+    if not axes:
+        return opts
+    a0 = axes[0]
+    for d in range(2, a0.size + 1):
+        if a0.size % d:
+            continue
+        left = a0.size // d
+        inner = ([MeshAxis(a0.name, left, a0.bandwidth)] if left > 1
+                 else []) + list(axes[1:])
+        opts.append((d, MeshAxis("stage", d, a0.bandwidth), inner))
+    if len(axes) > 1:
+        a1 = axes[1]
+        for d in range(2, a1.size + 1):
+            if a1.size % d:
+                continue
+            s = a0.size * d
+            left = a1.size // d
+            inner = ([MeshAxis(a1.name, left, a1.bandwidth)] if left > 1
+                     else []) + list(axes[2:])
+            opts.append((s, MeshAxis("stage", s, a0.bandwidth), inner))
+    return opts
+
+
+def _price_stage(sub: Graph, inner_axes: Sequence[MeshAxis],
+                 per_axis: Sequence[Assignment],
+                 crossing: Sequence[str], full_tensors: Dict[str, object],
+                 stage_bw: float, inner_degree: int, mem_scale: float,
+                 peak_flops: float
+                 ) -> Tuple[float, float, float, Dict[str, float]]:
+    """The single pricing source for a stage (DP, reporting, reprice and
+    the brute-force oracle all call this): walk the k-cut recursion over
+    the inner axes summing conversion seconds, and accumulate each
+    inbound tensor's boundary wire bytes by the exact per-axis
+    decomposition (costterms.BoundaryTransferTerm docstring) — base
+    ``mult × nbytes`` plus ``mult × s_k × groups_k × (a_k − 1)`` per
+    inner axis where it is not partitioned.  Tensors crossing the cut
+    but untouched by this stage (pass-throughs) stay at the optimistic
+    fully-sharded base."""
+    from .cost import graph_flops
+    from .tiling import Part
+
+    wire = {t: _boundary_mult(full_tensors[t]) * full_tensors[t].nbytes
+            for t in crossing}
+    comm_s = 0.0
+    cur = sub
+    groups = 1
+    for ax, assign in zip(inner_axes, per_axis):
+        comm_s += graph_cost(cur, assign, ax.size, mem_scale=mem_scale) \
+            / (ax.bandwidth * max(1, ax.size))
+        for t in crossing:
+            ts = cur.tensors.get(t)
+            if ts is None:
+                continue
+            if not isinstance(assign.get(t, REPLICATE), Part):
+                wire[t] += _boundary_mult(ts) * ts.nbytes * groups \
+                    * (ax.size - 1)
+        cur = cur.divided(assign, ax.size)
+        groups *= ax.size
+    boundary_s = sum(wire.values()) / (stage_bw * max(1, inner_degree))
+    compute_s = graph_flops(sub) / (peak_flops * max(1, inner_degree))
+    return comm_s, compute_s, boundary_s, wire
+
+
+def _solve_stage(g: Graph, blocks, spans, lo: int, hi: int,
+                 inner_axes: Sequence[MeshAxis], stage_bw: float,
+                 inner_degree: int, mem_scale: float, peak_flops: float,
+                 beam: BeamSpec, cost_cache: Optional[dict]
+                 ) -> StageSolution:
+    """Solve one candidate stage: per-inner-axis one-cut DPs with the
+    boundary-transfer term injected at the exact exchange rate, then
+    price the result through _price_stage."""
+    from .costterms import BoundaryTransferTerm
+
+    sub = stage_subgraph(g, blocks, lo, hi)
+    crossing = crossing_tensors(spans, lo) if lo > 0 else []
+    cur = sub
+    groups = 1
+    per_axis: List[Assignment] = []
+    exact = True
+    for ax in inner_axes:
+        denom = stage_bw * max(1, inner_degree)
+        weights = {
+            t: _boundary_mult(g.tensors[t]) * groups * ax.bandwidth
+            * ax.size / denom
+            for t in crossing if t in cur.tensors
+        }
+        terms = (BoundaryTransferTerm(weights),) if weights else ()
+        sol = solve_one_cut(cur, ax.size, beam=beam, mem_scale=mem_scale,
+                            cost_cache=cost_cache, terms=terms)
+        exact = exact and sol.exact
+        per_axis.append(sol.assignment)
+        cur = cur.divided(sol.assignment, ax.size)
+        groups *= ax.size
+    comm_s, compute_s, boundary_s, wire = _price_stage(
+        sub, inner_axes, per_axis, crossing, g.tensors, stage_bw,
+        inner_degree, mem_scale, peak_flops)
+    return StageSolution(lo, hi, sub, per_axis, list(crossing), comm_s,
+                         compute_s, boundary_s, wire, exact)
+
+
+def solve_pipeline(g: Graph, axes: Sequence[MeshAxis], *,
+                   n_micro: int = 8,
+                   stage_counts: Optional[Sequence[int]] = None,
+                   beam: BeamSpec = "auto",
+                   mem_scale: float = 1.0,
+                   peak_flops: float = DEFAULT_PEAK_FLOPS,
+                   cost_cache: Optional[dict] = None) -> PipelineSolution:
+    """Jointly choose pipeline stage cuts AND per-stage tilings.
+
+    For every candidate stage count S (1 plus divisor-carvings of the
+    slowest axes, optionally filtered by ``stage_counts``) an exact
+    interval min-max DP places S-1 cuts between layer blocks; each
+    interval's time comes from the boundary-term-aware one-cut solve of
+    its subgraph.  S=1 is the flat solve — the pipelined search can only
+    return something it prices better than the best flat tiling."""
+    from .costterms import BubbleTerm
+
+    blocks = layer_blocks(g)
+    spans = _block_spans(g, blocks)
+    n_blocks = len(blocks)
+    if cost_cache is None:
+        cost_cache = {}
+
+    best: Optional[PipelineSolution] = None
+    candidates: Dict[int, float] = {}
+    for n_stages, stage_ax, inner_axes in pipeline_stage_options(axes):
+        if stage_counts is not None and n_stages not in stage_counts:
+            continue
+        if n_stages > n_blocks:
+            continue
+        inner_degree = 1
+        for ax in inner_axes:
+            inner_degree *= ax.size
+        stage_bw = stage_ax.bandwidth if stage_ax else (
+            axes[0].bandwidth if axes else 0.0)
+        bubble = BubbleTerm(n_micro).factor(n_stages)
+        # per-candidate cache: stage time depends only on (lo, hi)
+        memo: Dict[Tuple[int, int], StageSolution] = {}
+
+        def stage(lo: int, hi: int) -> StageSolution:
+            st = memo.get((lo, hi))
+            if st is None:
+                st = _solve_stage(g, blocks, spans, lo, hi, inner_axes,
+                                  stage_bw, inner_degree, mem_scale,
+                                  peak_flops, beam, cost_cache)
+                memo[(lo, hi)] = st
+            return st
+
+        if n_stages == 1:
+            stages = [stage(0, n_blocks)]
+            total = stages[0].seconds
+        else:
+            inf = float("inf")
+            # dp[s][j]: best max-stage-time covering blocks [0, j) with s
+            # stages; parent[s][j] the minimizing previous boundary
+            dp = [[inf] * (n_blocks + 1) for _ in range(n_stages + 1)]
+            parent = [[-1] * (n_blocks + 1) for _ in range(n_stages + 1)]
+            dp[0][0] = 0.0
+            for s in range(1, n_stages + 1):
+                for j in range(s, n_blocks - (n_stages - s) + 1):
+                    for i in range(s - 1, j):
+                        if dp[s - 1][i] == inf:
+                            continue
+                        v = max(dp[s - 1][i], stage(i, j).seconds)
+                        if v < dp[s][j]:
+                            dp[s][j] = v
+                            parent[s][j] = i
+            if dp[n_stages][n_blocks] == inf:
+                continue
+            cuts = [n_blocks]
+            for s in range(n_stages, 0, -1):
+                cuts.append(parent[s][cuts[-1]])
+            cuts.reverse()
+            stages = [stage(lo, hi)
+                      for lo, hi in zip(cuts[:-1], cuts[1:])]
+            total = bubble * max(st.seconds for st in stages)
+        candidates[n_stages] = total
+        if best is None or total < best.total_seconds:
+            best = PipelineSolution(
+                list(axes), n_micro, n_stages, stage_ax,
+                list(inner_axes), stages, bubble, total, candidates,
+                mem_scale, peak_flops,
+                all(st.exact for st in stages))
+    assert best is not None, "no pipeline candidate (empty mesh?)"
+    best.candidates = candidates
+    return best
+
+
+def reprice_pipeline(g: Graph, psol: PipelineSolution) -> float:
+    """Recompute a PipelineSolution's total from its stored cuts and
+    assignments via _price_stage — the repricing invariant pinned by
+    verify/fuzz.py (solve == reprice == oracle)."""
+    blocks = layer_blocks(g)
+    spans = _block_spans(g, blocks)
+    inner_degree = 1
+    for ax in psol.inner_axes:
+        inner_degree *= ax.size
+    stage_bw = psol.stage_axis.bandwidth if psol.stage_axis else (
+        psol.axes[0].bandwidth if psol.axes else 0.0)
+    worst = 0.0
+    for st in psol.stages:
+        sub = stage_subgraph(g, blocks, st.lo, st.hi)
+        crossing = crossing_tensors(spans, st.lo) if st.lo > 0 else []
+        comm_s, compute_s, boundary_s, _ = _price_stage(
+            sub, psol.inner_axes, st.per_axis, crossing, g.tensors,
+            stage_bw, inner_degree, psol.mem_scale, psol.peak_flops)
+        worst = max(worst, comm_s + compute_s + boundary_s)
+    return psol.bubble_factor * worst
+
+
+def pipeline_brute_combo_count(g: Graph, axes: Sequence[MeshAxis],
+                               stage_counts: Optional[Sequence[int]] = None
+                               ) -> int:
+    """Cost estimate for the oracle: Σ over candidates and stage ranges
+    of the stage subgraph's full assignment product."""
+    from .cost import tensor_tiling_choices
+    blocks = layer_blocks(g)
+    n_blocks = len(blocks)
+    total = 0
+    for n_stages, _stage_ax, inner_axes in pipeline_stage_options(axes):
+        if stage_counts is not None and n_stages not in stage_counts:
+            continue
+        if n_stages > n_blocks:
+            continue
+        for lo in range(n_blocks):
+            for hi in range(lo + 1, n_blocks + 1):
+                sub = stage_subgraph(g, blocks, lo, hi)
+                for ax in inner_axes:
+                    combos = 1
+                    for t in sub.tensors:
+                        combos *= len(tensor_tiling_choices(sub, t,
+                                                            ax.size))
+                    total += combos
+    return total
+
+
+def solve_pipeline_bruteforce(g: Graph, axes: Sequence[MeshAxis], *,
+                              n_micro: int = 8,
+                              stage_counts: Optional[Sequence[int]] = None,
+                              mem_scale: float = 1.0,
+                              peak_flops: float = DEFAULT_PEAK_FLOPS
+                              ) -> PipelineSolution:
+    """Exhaustive oracle over (cut set × per-stage tiling): for every
+    candidate stage count and every cut placement, enumerate each stage's
+    full tiling assignment and price it through the same _price_stage as
+    the DP.  Stages are independent under the min-max objective (boundary
+    bytes are charged to the consumer), so the per-stage minimum is taken
+    before the max over stages — identical optimum to enumerating full
+    cross products, without the cross-product blowup.  Exact only for a
+    single-axis mesh (multi-axis inner solves are the same greedy chain
+    as solve_mesh, which the oracle cannot enumerate); rejects wider
+    meshes."""
+    from .costterms import BubbleTerm
+
+    for _n, _sa, inner_axes in pipeline_stage_options(axes):
+        if len(inner_axes) > 1:
+            raise ValueError("pipeline oracle supports single-axis meshes")
+    blocks = layer_blocks(g)
+    spans = _block_spans(g, blocks)
+    n_blocks = len(blocks)
+
+    best: Optional[PipelineSolution] = None
+    candidates: Dict[int, float] = {}
+    for n_stages, stage_ax, inner_axes in pipeline_stage_options(axes):
+        if stage_counts is not None and n_stages not in stage_counts:
+            continue
+        if n_stages > n_blocks:
+            continue
+        inner_degree = 1
+        for ax in inner_axes:
+            inner_degree *= ax.size
+        stage_bw = stage_ax.bandwidth if stage_ax else (
+            axes[0].bandwidth if axes else 0.0)
+        bubble = BubbleTerm(n_micro).factor(n_stages)
+
+        memo: Dict[Tuple[int, int], StageSolution] = {}
+
+        def stage_best(lo: int, hi: int) -> StageSolution:
+            st = memo.get((lo, hi))
+            if st is not None:
+                return st
+            sub = stage_subgraph(g, blocks, lo, hi)
+            crossing = crossing_tensors(spans, lo) if lo > 0 else []
+            names = list(sub.tensors)
+            choice_lists = [tensor_tiling_choices(sub, t, ax.size)
+                            for ax in inner_axes for t in names]
+            best_st: Optional[StageSolution] = None
+            if not inner_axes:
+                combos = [()]
+            else:
+                combos = itertools.product(
+                    *(tensor_tiling_choices(sub, t, inner_axes[0].size)
+                      for t in names))
+            del choice_lists
+            for combo in combos:
+                per_axis = [dict(zip(names, combo))] if inner_axes else []
+                comm_s, compute_s, boundary_s, wire = _price_stage(
+                    sub, inner_axes, per_axis, crossing, g.tensors,
+                    stage_bw, inner_degree, mem_scale, peak_flops)
+                cand = StageSolution(lo, hi, sub, per_axis,
+                                     list(crossing), comm_s, compute_s,
+                                     boundary_s, wire)
+                if best_st is None or cand.seconds < best_st.seconds:
+                    best_st = cand
+            assert best_st is not None
+            memo[(lo, hi)] = best_st
+            return best_st
+
+        for cut_mid in itertools.combinations(range(1, n_blocks),
+                                              n_stages - 1):
+            cuts = (0,) + cut_mid + (n_blocks,)
+            stages = [stage_best(lo, hi)
+                      for lo, hi in zip(cuts[:-1], cuts[1:])]
+            total = bubble * max(st.seconds for st in stages)
+            if n_stages not in candidates or total < candidates[n_stages]:
+                candidates[n_stages] = total
+            if best is None or total < best.total_seconds:
+                best = PipelineSolution(
+                    list(axes), n_micro, n_stages, stage_ax,
+                    list(inner_axes), stages, bubble, total, candidates,
+                    mem_scale, peak_flops, True)
+    assert best is not None
+    best.candidates = candidates
+    return best
+
+
+def pipeline_breakdown(g: Graph, psol: PipelineSolution
+                       ) -> Dict[str, object]:
+    """solution_breakdown grown per-stage: each stage's intra-stage byte
+    attribution (by_kind / by_role / by_axis / by_phase over its subgraph
+    and inner axes) plus per-boundary-edge wire-byte attribution — the
+    numbers the verify pipeline cell gates measured stage-boundary bytes
+    against."""
+    stages = []
+    boundaries = []
+    for i, st in enumerate(psol.stages):
+        bd = solution_breakdown(st.graph, psol.inner_axes, st.per_axis)
+        bd.update({
+            "stage": i, "blocks": [st.lo, st.hi],
+            "comm_seconds": st.comm_seconds,
+            "compute_seconds": st.compute_seconds,
+            "boundary_seconds": st.boundary_seconds,
+        })
+        stages.append(bd)
+        if i > 0:
+            boundaries.append({
+                "edge": [i - 1, i],
+                "tensors": dict(st.boundary_bytes),
+                "wire_bytes_total": st.boundary_bytes_total,
+                "seconds": st.boundary_seconds,
+            })
+    return {
+        "n_stages": psol.n_stages,
+        "n_micro": psol.n_micro,
+        "bubble_factor": psol.bubble_factor,
+        "total_seconds": psol.total_seconds,
+        "candidates": {str(k): v for k, v in psol.candidates.items()},
+        "stages": stages,
+        "boundaries": boundaries,
+        "intra_stage_wire_bytes_total": sum(b["total"] for b in stages),
+        "boundary_wire_bytes_total": sum(b["wire_bytes_total"]
+                                         for b in boundaries),
+    }

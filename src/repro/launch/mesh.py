@@ -53,3 +53,12 @@ def mesh_to_solver_axes(mesh) -> List[MeshAxis]:
 def make_demo_mesh(n_data: int = 4, n_model: int = 2):
     """Small mesh for CPU multi-device tests (host device count permits)."""
     return make_compat_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_stage_mesh(n_stages: int, inner: int = 1):
+    """(stage[, data]) mesh for the pipeline stage runner
+    (runtime.pipeline_parallel): the solver's ``stage`` axis carved from
+    the slowest tier, the leftover inner degree riding ICI as ``data``."""
+    if inner > 1:
+        return make_compat_mesh((n_stages, inner), ("stage", "data"))
+    return make_compat_mesh((n_stages,), ("stage",))

@@ -40,6 +40,15 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--plan", default=None, choices=("auto",),
                     help="'auto' solves the train tiling for the mesh "
                          "(cached) and shards params+opt state+batch")
+    ap.add_argument("--stages", default=None, metavar="auto|N",
+                    help="jointly solve pipeline stage cuts + per-stage "
+                         "tilings for the mesh (bubble-aware, n_micro = "
+                         "--microbatches) and report the hybrid plan; "
+                         "'auto' searches every stage carving, N pins "
+                         "the stage count.  The engine run proceeds "
+                         "with the flat plan — the stage runner "
+                         "(runtime.pipeline_parallel) executes "
+                         "homogeneous layer stacks")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--buckets", type=int, default=4)
     ap.add_argument("--grad-compression", action="store_true")
@@ -61,6 +70,8 @@ def main(argv=None) -> int:
     mesh_shape = None
     if args.plan and not args.mesh:
         ap.error("--plan requires --mesh")
+    if args.stages and not args.mesh:
+        ap.error("--stages requires --mesh")
     if args.mesh:
         mesh_shape = tuple(int(s) for s in args.mesh.lower().split("x"))
         n_dev = 1
@@ -109,6 +120,45 @@ def main(argv=None) -> int:
         else:
             print(f"note: --mesh {args.mesh} without --plan auto "
                   f"trains UNSHARDED (no plan, no constraints)")
+
+    pipeline_rec = None
+    if args.stages:
+        from ..core.builders import build_graph
+        from ..core.solver import solve_pipeline
+        from .mesh import mesh_to_solver_axes
+        p_shape = ShapeConfig(f"stages{args.batch}x{args.seq}",
+                              args.seq, args.batch, "train")
+        pg = build_graph(cfg, p_shape, master_fp32=master_fp32)
+        n_micro = max(1, args.microbatches)
+        stage_counts = None if args.stages == "auto" \
+            else (1, int(args.stages))
+        t0 = time.time()
+        psol = solve_pipeline(pg, mesh_to_solver_axes(mesh),
+                              n_micro=n_micro,
+                              stage_counts=stage_counts, mem_scale=0.0)
+        t_flat = psol.candidates.get(1, float("inf"))
+        pipeline_rec = {
+            "n_stages": psol.n_stages,
+            "cuts": psol.cuts,
+            "n_micro": n_micro,
+            "bubble_factor": psol.bubble_factor,
+            "modeled_step_s": psol.total_seconds,
+            "flat_step_s": t_flat,
+            "candidates_ms": {str(k): v * 1e3
+                              for k, v in psol.candidates.items()},
+            "solve_s": time.time() - t0,
+        }
+        print(f"pipeline plan ({pipeline_rec['solve_s']:.1f}s):")
+        print("  " + psol.describe().replace("\n", "\n  "))
+        if psol.n_stages > 1:
+            print(f"  modeled {psol.total_seconds * 1e3:.3f} ms vs best "
+                  f"flat {t_flat * 1e3:.3f} ms "
+                  f"(x{t_flat / psol.total_seconds:.2f}); this run "
+                  f"proceeds with the flat plan (the stage runner "
+                  f"executes homogeneous stacks)")
+        elif n_micro == 1:
+            print("  flat plan wins (with --microbatches 1 the bubble "
+                  "factor equals the stage count)")
 
     model = LM(cfg, plan=plan, mesh=mesh)
     engine = TrainEngine(
@@ -173,6 +223,7 @@ def main(argv=None) -> int:
             "grad_compression": args.grad_compression,
             "master_fp32": master_fp32,
             "mesh": args.mesh, "plan": args.plan,
+            "stages": args.stages,
             "n_devices": jax.device_count(),
         },
         "first_loss": hist[0]["loss"] if hist else None,
@@ -182,6 +233,7 @@ def main(argv=None) -> int:
         "tokens_per_s": tput,
         "breakdown_s": {"data": data_s, "step": step_s, "ckpt": ckpt_s},
         "predicted_wire_bytes": (plan_rec or {}).get("total_bytes"),
+        "pipeline": pipeline_rec,
     }
     if hist:
         print(f"{len(hist)} steps, loss {rec['first_loss']:.3f} -> "

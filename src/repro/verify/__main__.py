@@ -60,6 +60,8 @@ def main(argv=None) -> int:
               f" trace")
         print(f"{'train-engine':16s} {'(engine cell)':22s} {'dense':12s}"
               f" train")
+        print(f"{'pipeline':16s} {'(stage runner cell)':22s} "
+              f"{'dense':12s} train")
         return 0
 
     import jax
@@ -94,11 +96,13 @@ def main(argv=None) -> int:
             and not args.no_numerics
         with_trace = names is None or "trace" in names
         with_train = names is None or "train-engine" in names
+        with_pipeline = names is None or "pipeline" in names
         if names is None:
             specs = get_cells(None)
         else:
             names = [n for n in names
-                     if n not in ("serve", "trace", "train-engine")]
+                     if n not in ("serve", "trace", "train-engine",
+                                  "pipeline")]
             specs = get_cells(names) if names else []
         mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
         recs = run_cells(specs, mesh, numerics=not args.no_numerics,
@@ -134,6 +138,23 @@ def main(argv=None) -> int:
                       f"({time.time() - t0:.0f}s)", flush=True)
                 if trec["status"] == "error":
                     print(trec["traceback"], flush=True)
+        if with_pipeline:
+            from .pipeline_cell import run_pipeline_cell
+            t0 = time.time()
+            prec = run_pipeline_cell(mesh)
+            report["pipeline"] = prec
+            ok &= prec["status"] == "ok"
+            if not args.json:
+                sol = prec.get("solution", {})
+                cal = prec.get("calibration", {})
+                print(f"[{prec['status']}] {'pipeline':16s} "
+                      f"S={sol.get('n_stages')} "
+                      f"modeled={sol.get('modeled_ms', float('nan')):.3f}ms "
+                      f"ratio={cal.get('ratio', float('nan')):.2f} "
+                      f"dloss={prec.get('trajectory', {}).get('max_abs_dloss')} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+                if prec["status"] == "error":
+                    print(prec["traceback"], flush=True)
         if with_trace:
             from .trace_cell import run_trace_cell
             t0 = time.time()

@@ -13,6 +13,9 @@ invariants that must hold on *every* graph:
   execution    a solved plan, forced onto a real device mesh via
                ShardingPlan, computes the same numbers as the serial
                program (executor.py)
+  pipeline     the joint stage-cut x per-stage-tiling solve (every op
+               tagged as its own layer block) reprices to its own cost
+               and equals the brute-force (cut set x tiling) oracle
   trace        the graph round-trips through the jaxpr frontend: a JAX
                function *generated from the graph* (executor semantics)
                is captured by repro.trace and re-solved; the captured
@@ -36,8 +39,10 @@ from typing import Dict, List, Optional
 
 from ..core.cost import graph_cost
 from ..core.graph import Graph
-from ..core.solver import (MeshAxis, solve_mesh, solve_one_cut,
-                           solve_one_cut_bruteforce)
+from ..core.solver import (MeshAxis, pipeline_brute_combo_count,
+                           reprice_pipeline, solve_mesh, solve_one_cut,
+                           solve_one_cut_bruteforce, solve_pipeline,
+                           solve_pipeline_bruteforce)
 from ..core.tiling import REPLICATE
 
 _DIM_SIZES = (2, 4, 8)
@@ -162,6 +167,8 @@ class FuzzResult:
     n: int
     arities: List[int]
     oracle_checked: int = 0
+    pipeline_checked: int = 0
+    pipeline_oracle_checked: int = 0
     permutation_checked: int = 0
     exec_checked: int = 0
     trace_checked: int = 0
@@ -296,6 +303,32 @@ def check_graph(g: Graph, arity: int, rng: random.Random,
                 result.failures.append(
                     f"{g.name}@mesh: autoshard {t} differs by {err} "
                     f"(scale {scale})")
+
+    # pipelined solve: solve == reprice == oracle.  Tag every op as its
+    # own layer block (mutates g — keep this invariant LAST) and run the
+    # joint stage-cut + tiling search on a single size-4 axis, where the
+    # brute-force (cut set x per-stage tiling) enumeration is exact.
+    def close_rel(a, b):
+        return abs(a - b) <= 1e-9 * max(abs(a), abs(b)) + 1e-18
+
+    for i, op in enumerate(g.ops):
+        op.attrs["group"] = i
+    paxes = [MeshAxis("s0", 4, 1e9)]
+    pkw = dict(n_micro=3, mem_scale=1.0, peak_flops=1e12)
+    psol = solve_pipeline(g, paxes, **pkw)
+    result.pipeline_checked += 1
+    rp = reprice_pipeline(g, psol)
+    if not close_rel(psol.total_seconds, rp):
+        result.failures.append(
+            f"{g.name}@pipe: reprice {rp} != solve {psol.total_seconds}")
+    if pipeline_brute_combo_count(g, paxes) <= _MAX_BRUTE_COMBOS:
+        poracle = solve_pipeline_bruteforce(g, paxes, **pkw)
+        result.pipeline_oracle_checked += 1
+        for s, v in poracle.candidates.items():
+            got = psol.candidates.get(s, float("inf"))
+            if not close_rel(got, v):
+                result.failures.append(
+                    f"{g.name}@pipe: S={s} solver {got} != oracle {v}")
 
 
 def run_fuzz(n: int, seed: int = 0, arities=(2, 4),
