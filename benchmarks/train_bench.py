@@ -69,6 +69,11 @@ WARMUP = 2
 # step time (the ISSUE-6 acceptance gate; runs in --smoke too)
 PIPE_LAYERS, PIPE_D, PIPE_BATCH, PIPE_N_MICRO = 8, 512, 64, 8
 PIPE_STEPS, PIPE_WARMUP = 5, 1
+# kernel cell: SSD/hybrid family so the microbatch step routes through
+# the Pallas chunk-scan; gated on dispatch + modeled terms, wall-clock
+# reported ungated (host CPU runs the kernel in interpret mode)
+KERNEL_ARCH, KERNEL_BATCH, KERNEL_SEQ = "zamba2-2.7b", 16, 32
+KERNEL_STEPS, KERNEL_WARMUP = 3, 1
 
 
 def modeled_step_seconds(g, axes, per_axis) -> float:
@@ -88,10 +93,12 @@ def modeled_step_seconds(g, axes, per_axis) -> float:
     return comm + graph_flops(g) / (PEAK_FLOPS * n_dev)
 
 
-def measure_engine(cfg, plan, mesh, batch, seq, steps, warmup) -> dict:
+def measure_engine(cfg, plan, mesh, batch, seq, steps, warmup,
+                   kernels: str = "auto") -> dict:
     eng = TrainEngine(
         LM(cfg, plan=plan, mesh=mesh),
-        EngineConfig(optim=AdamWConfig(lr=2e-3, warmup_steps=2)),
+        EngineConfig(optim=AdamWConfig(lr=2e-3, warmup_steps=2),
+                     kernels=kernels),
         mesh=mesh)
     state = eng.init_state(jax.random.PRNGKey(0))
     dcfg = DataConfig(seed=0, vocab=cfg.vocab, seq_len=seq,
@@ -253,6 +260,74 @@ def run_pipeline_cell() -> dict:
     }
 
 
+def run_kernel_cell() -> dict:
+    """Kernel-aware solve + kernel-routed execution on an SSD/hybrid
+    cell.  Gated: (a) the compute-term-aware plan prices no worse than
+    the compute-blind plan under the kernel-aware objective, (b) the
+    jitted engine step actually dispatches the Pallas chunk-scan.
+    Wall-clock pallas-vs-xla is reported ungated: the host CPU runs the
+    kernel through the Pallas interpreter, which benchmarks the
+    dispatch plumbing, not the TPU kernel."""
+    from unittest import mock
+
+    from repro.core.costterms import ComputeConfig
+    from repro.core.solver import composed_cost, solution_compute_seconds
+    from repro.kernels import ops as kops
+
+    cfg = get_arch(KERNEL_ARCH).reduced()
+    shape = ShapeConfig("bench_train", KERNEL_SEQ, KERNEL_BATCH, "train")
+    axes = verify_axes()
+    mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
+    g = build_graph(cfg, shape, master_fp32=True)
+    cc = ComputeConfig()
+
+    t0 = time.time()
+    sol_blind = solve_mesh(g, axes)
+    sol_aware = solve_mesh(g, axes, compute=cc)
+    solve_s = time.time() - t0
+    aware_priced = composed_cost(g, axes, sol_aware.per_axis, compute=cc)
+    blind_priced = composed_cost(g, axes, sol_blind.per_axis, compute=cc)
+    modeled_ok = aware_priced <= blind_priced * (1 + 1e-9)
+
+    plan = ShardingPlan.from_graph_solution(sol_aware, g)
+
+    calls = {"n": 0}
+    orig = kops.ssd_chunk_scan
+
+    def counted(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    with mock.patch.object(kops, "ssd_chunk_scan", counted):
+        meas_pl = measure_engine(cfg, plan, mesh, KERNEL_BATCH,
+                                 KERNEL_SEQ, KERNEL_STEPS, KERNEL_WARMUP,
+                                 kernels="pallas")
+    meas_xla = measure_engine(cfg, plan, mesh, KERNEL_BATCH, KERNEL_SEQ,
+                              KERNEL_STEPS, KERNEL_WARMUP, kernels="xla")
+
+    gate_ok = bool(modeled_ok and calls["n"] > 0)
+    return {
+        "arch": KERNEL_ARCH, "batch": KERNEL_BATCH, "seq": KERNEL_SEQ,
+        "mesh": dict(zip(MESH_AXES, MESH_SHAPE)),
+        "solve_s": solve_s,
+        "modeled": {
+            "aware_priced_bytes": aware_priced,
+            "blind_priced_bytes": blind_priced,
+            "compute_seconds": solution_compute_seconds(
+                g, axes, sol_aware.per_axis, cc),
+            "ok": bool(modeled_ok),
+        },
+        "dispatch": {"ssd_chunk_scan_calls": calls["n"],
+                     "ok": calls["n"] > 0},
+        "measured_ungated": {
+            "pallas": meas_pl, "xla": meas_xla,
+            "speedup": (meas_xla["mean_step_s"]
+                        / meas_pl["mean_step_s"]),
+        },
+        "gate_ok": gate_ok,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
@@ -285,10 +360,19 @@ def main(argv=None) -> int:
           f"measured x{pipe['measured']['speedup']:.2f} "
           f"[{pipe['seconds']:.0f}s]", flush=True)
 
+    t0 = time.time()
+    kern = run_kernel_cell()
+    kern["seconds"] = time.time() - t0
+    print(f"{kern['arch']:16s} kernel-routed "
+          f"dispatch={kern['dispatch']['ssd_chunk_scan_calls']} "
+          f"modeled_ok={kern['modeled']['ok']} "
+          f"measured x{kern['measured_ungated']['speedup']:.2f} "
+          f"(ungated) [{kern['seconds']:.0f}s]", flush=True)
+
     consistency = _solver_consistency()
     best = max(r["modeled"]["speedup"] for r in rows)
     gate_ok = best >= MIN_SPEEDUP and consistency["ok"] \
-        and pipe["gate_ok"]
+        and pipe["gate_ok"] and kern["gate_ok"]
     rec = {
         "meta": {
             "mesh": dict(zip(MESH_AXES, MESH_SHAPE)),
@@ -298,6 +382,7 @@ def main(argv=None) -> int:
         },
         "cells": rows,
         "pipeline": pipe,
+        "kernel": kern,
         "solver_consistency": consistency,
         "gate": {
             "metric": "modeled step time (wire bytes / ring bandwidth "
@@ -306,6 +391,7 @@ def main(argv=None) -> int:
             "best_modeled_speedup": best,
             "solver_consistency_ok": consistency["ok"],
             "pipeline_beats_dp_and_flat": pipe["gate_ok"],
+            "kernel_cell_ok": kern["gate_ok"],
             "ok": bool(gate_ok),
         },
     }
@@ -315,8 +401,9 @@ def main(argv=None) -> int:
     print(f"-> {out}")
     if not gate_ok:
         print(f"FAIL: best modeled speedup {best:.2f} < {MIN_SPEEDUP}, "
-              f"solver consistency failed, or pipelined hybrid did not "
-              f"beat pure-DP and best-flat")
+              f"solver consistency failed, pipelined hybrid did not "
+              f"beat pure-DP and best-flat, or the kernel cell failed "
+              f"its dispatch/modeled gates")
         return 1
     print(f"gate ok: modeled solved-plan speedup x{best:.2f} >= "
           f"{MIN_SPEEDUP} over pure data parallelism")

@@ -46,6 +46,25 @@ class Roofline:
         return self.wire_bytes_per_dev / (ICI_BW * ICI_LINKS_PER_AXIS)
 
     @property
+    def t_step(self) -> float:
+        """Modeled step time: compute and HBM traffic overlap on-chip
+        (take the max), collectives serialize against both on this
+        generation's fabric."""
+        return max(self.t_compute, self.t_memory) + self.t_collective
+
+    def compute_calibration(self, analytic_flops_total: float) -> float:
+        """Measured-over-analytic flops ratio — the ``calibration``
+        knob of core.costterms.ComputeConfig.  Projects the HLO
+        cost_analysis flops (which include remat, normalization and
+        attention score work the einsum graph omits) onto the solver's
+        analytic 2·Π-sizes count so the ComputeTerm prices real
+        compiled artifacts, not just the abstract graph."""
+        if analytic_flops_total <= 0:
+            return 1.0
+        return (self.flops_per_dev * max(1, self.n_devices)
+                / analytic_flops_total)
+
+    @property
     def dominant(self) -> str:
         terms = {"compute": self.t_compute, "memory": self.t_memory,
                  "collective": self.t_collective}
@@ -87,7 +106,8 @@ class Roofline:
             "model_flops_total": self.model_flops_total,
             "bytes_per_dev_peak": self.bytes_per_dev_peak,
             "t_compute": self.t_compute, "t_memory": self.t_memory,
-            "t_collective": self.t_collective, "dominant": self.dominant,
+            "t_collective": self.t_collective, "t_step": self.t_step,
+            "dominant": self.dominant,
             "useful_ratio": self.useful_ratio,
             "roofline_fraction": self.roofline_fraction,
             "ideal_bytes_per_dev": self.ideal_bytes_per_dev,

@@ -53,13 +53,31 @@ so every knob of the pipeline cost model is declared in one place.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Sequence
+import math
+from typing import Dict, Mapping, Optional, Sequence
 
 from .cost import memory_penalties, tensor_tiling_choices
 from .graph import Graph
 from .tiling import Part, Tiling
 
 PenaltyTable = Dict[str, Dict[Tiling, float]]
+
+# TPU v5e-class defaults, mirroring launch/mesh.py (core must not import
+# launch; launch passes its own constants where they differ).
+DEFAULT_PEAK_FLOPS = 197e12
+MXU_LANE = 128      # last-dim granule (MXU lanes / VPU lane width)
+VPU_SUBLANE = 8     # second-to-last-dim granule (f32 sublanes)
+
+
+def alignment_factor(n: float, unit: int) -> float:
+    """Padded-over-actual block size when an ``n``-element dim is tiled
+    at ``unit`` granularity — ceil(n/unit)·unit / n >= 1.  This is the
+    kernel-visible cost of a tiling whose per-shard blocks miss the
+    MXU/VPU-aligned sizes (Pallas pads the tile; the MXU runs the padded
+    shape)."""
+    if n <= 0:
+        return 1.0
+    return math.ceil(n / unit) * unit / n
 
 
 class CostTerm:
@@ -143,6 +161,129 @@ class BubbleTerm:
         if n_stages <= 1:
             return 1.0
         return (self.n_micro + n_stages - 1) / float(self.n_micro)
+
+
+@dataclasses.dataclass
+class ComputeTerm(CostTerm):
+    """Kernel-aware compute time as a per-tensor penalty (ROADMAP item 1:
+    the paper's objective is communication-only; FlexFlow/PaSE fold
+    per-op compute into the strategy search).
+
+    Each einsum op's analytic FLOPs (2 × Π dim sizes × repeat, exactly
+    :func:`repro.core.cost.graph_flops` per op) are attributed to its
+    *output* tensor's tiling choice:
+
+      Part(d)    -> flops / arity × alignment_factor(per-shard d size)
+      REPLICATE  -> flops            (each cut group member computes all)
+
+    and converted from seconds into the cut's byte currency by the
+    ``exchange`` rate (one axis-k byte is worth 1/(bw_k × a_k) seconds in
+    solve_mesh's accounting, so t seconds = t × bw_k × a_k bytes — the
+    same pre-scaling BoundaryTransferTerm uses).  ``calibration`` is the
+    measured-HLO-flops / analytic-flops ratio from real compiled
+    artifacts (analysis/roofline.py; verify's compute cell fits it).
+
+    Modeling notes, deliberate and documented in DESIGN.md §14:
+    - The alignment unit is MXU_LANE for a cut of the output's *last*
+      dim, VPU_SUBLANE otherwise; a shard smaller than its unit pays the
+      padded block (the factor may exceed the arity — partitioning a
+      tiny dim really is slower than replicating on the MXU).
+    - A replicated output is charged full flops even when a contraction
+      dim is partitioned (the per-tensor interface cannot see the
+      inputs' joint assignment); this biases the solver toward
+      output-partitioned forms, which are also the MXU-friendly ones.
+    - All penalties are >= 0, preserving the DP's dominance pruning, and
+      the term rides the standard penalties() interface, so
+      solve == reprice == oracle holds by construction.
+    """
+
+    peak_flops: float = DEFAULT_PEAK_FLOPS
+    exchange: float = 1.0       # bytes per second: axis bw × arity
+    calibration: float = 1.0
+    lane: int = MXU_LANE
+    sublane: int = VPU_SUBLANE
+    name = "compute"
+
+    def penalties(self, g: Graph, arity: int) -> PenaltyTable:
+        out: PenaltyTable = {}
+        scale = self.calibration * self.exchange / self.peak_flops
+        for op in g.ops:
+            if op.kind != "einsum":
+                continue
+            lhs, rhs = (g.tensors[i] for i in op.inputs)
+            ots = g.tensors[op.output]
+            sizes = dict(zip(lhs.dims, lhs.shape))
+            sizes.update(zip(rhs.dims, rhs.shape))
+            sizes.update(zip(ots.dims, ots.shape))
+            flops = 2.0 * op.repeat
+            for s in sizes.values():
+                flops *= s
+            per = out.setdefault(op.output, {})
+            for c in tensor_tiling_choices(g, op.output, arity):
+                if isinstance(c, Part):
+                    n = dict(zip(ots.dims, ots.shape))[c.dim] / arity
+                    unit = self.lane if c.dim == ots.dims[-1] \
+                        else self.sublane
+                    t = flops / arity * alignment_factor(n, unit)
+                else:
+                    t = flops
+                per[c] = per.get(c, 0.0) + t * scale
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeConfig:
+    """Solver-facing configuration of the compute term: one per solve,
+    expanded into a per-axis :class:`ComputeTerm` (the exchange rate
+    depends on each axis' bandwidth × arity) by solve_mesh /
+    composed_cost / solution_breakdown."""
+
+    peak_flops: float = DEFAULT_PEAK_FLOPS
+    calibration: float = 1.0
+    lane: int = MXU_LANE
+    sublane: int = VPU_SUBLANE
+
+    def term_for_axis(self, bandwidth: float, arity: int) -> ComputeTerm:
+        return ComputeTerm(peak_flops=self.peak_flops,
+                           exchange=bandwidth * max(1, arity),
+                           calibration=self.calibration,
+                           lane=self.lane, sublane=self.sublane)
+
+    def token(self) -> str:
+        """Stable key component for the plan cache (launch/compile.py):
+        two plans solved under different compute configs must not share
+        a cache entry."""
+        return (f"ct{self.peak_flops:.4g}-{self.calibration:.4g}"
+                f"-{self.lane}-{self.sublane}")
+
+
+def graph_compute_seconds(g: Graph, cfg: ComputeConfig) -> float:
+    """Exact in-model per-device compute seconds of a graph whose shapes
+    are already divided to per-device blocks (Graph.divided along every
+    mesh axis): Σ einsum flops × block alignment factor / peak, times the
+    measured calibration.  This is the end-to-end compute half of the
+    predicted step time (the per-axis ComputeTerm charges are the DP's
+    *search* signal; this is the exact final accounting — see
+    solver.solution_compute_seconds)."""
+    total = 0.0
+    for op in g.ops:
+        if op.kind != "einsum":
+            continue
+        lhs, rhs = (g.tensors[i] for i in op.inputs)
+        ots = g.tensors[op.output]
+        sizes = dict(zip(lhs.dims, lhs.shape))
+        sizes.update(zip(rhs.dims, rhs.shape))
+        sizes.update(zip(ots.dims, ots.shape))
+        flops = 2.0 * op.repeat
+        for s in sizes.values():
+            flops *= s
+        f = 1.0
+        if len(ots.shape) >= 1:
+            f *= alignment_factor(ots.shape[-1], cfg.lane)
+        if len(ots.shape) >= 2:
+            f *= alignment_factor(ots.shape[-2], cfg.sublane)
+        total += flops * f
+    return cfg.calibration * total / cfg.peak_flops
 
 
 def combined_penalties(g: Graph, arity: int,

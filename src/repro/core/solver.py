@@ -490,16 +490,35 @@ class TilingSolution:
         return "\n".join(lines)
 
 
+def _axis_terms(terms: Sequence, compute, ax: "MeshAxis") -> Sequence:
+    """Per-axis term list: shared ``terms`` plus the compute term at this
+    axis\' exchange rate (ComputeConfig -> ComputeTerm expansion)."""
+    if compute is None:
+        return terms
+    return tuple(terms) + (
+        compute.term_for_axis(ax.bandwidth, ax.size),)
+
+
 def solve_mesh(g: Graph, axes: Sequence[MeshAxis],
                fixed_per_axis: Optional[Dict[str, Assignment]] = None,
                beam: BeamSpec = "auto",
                mem_scale: float = 1.0,
                optimize: bool = True,
-               cost_cache: Optional[dict] = None) -> TilingSolution:
+               cost_cache: Optional[dict] = None,
+               terms: Sequence = (),
+               compute=None) -> TilingSolution:
     """Algorithm 1 generalized to a named mesh: recursively cut along each
     axis (slowest first), dividing shapes in between.  The memoized
     ``cost_cache`` is shared across the per-axis cuts (pass one in to
-    share further, e.g. across capacity-escalation rounds)."""
+    share further, e.g. across capacity-escalation rounds).
+
+    ``terms`` are extra costterms.CostTerm penalties applied at every
+    axis; ``compute`` is a costterms.ComputeConfig pricing kernel-aware
+    compute time per cut (each axis sees the *divided* graph, so the
+    per-axis compute charges are the DP's search signal, mirroring how
+    the capacity term re-prices per axis; the exact end-to-end compute
+    seconds of the final composed tiling come from
+    :func:`solution_compute_seconds`)."""
     fixed_per_axis = fixed_per_axis or {}
     if cost_cache is None and optimize:
         cost_cache = {}
@@ -513,7 +532,8 @@ def solve_mesh(g: Graph, axes: Sequence[MeshAxis],
         sol = solve_one_cut(cur, ax.size,
                             fixed=fixed_per_axis.get(ax.name), beam=beam,
                             mem_scale=mem_scale, optimize=optimize,
-                            cost_cache=cost_cache)
+                            cost_cache=cost_cache,
+                            terms=_axis_terms(terms, compute, ax))
         weighted = sol.cost * groups
         per_axis.append(sol.assignment)
         per_bytes.append(weighted)
@@ -523,6 +543,21 @@ def solve_mesh(g: Graph, axes: Sequence[MeshAxis],
         cur = cur.divided(sol.assignment, ax.size)
         groups *= ax.size
     return TilingSolution(list(axes), per_axis, per_bytes, total_b, total_s)
+
+
+def solution_compute_seconds(g: Graph, axes: Sequence[MeshAxis],
+                             per_axis: Sequence[Assignment],
+                             compute) -> float:
+    """Exact in-model per-device compute seconds of a composed tiling:
+    divide the graph along every axis, then price the final per-device
+    blocks (flops × alignment / peak × calibration) — the compute half
+    of the predicted step time, comparable to HLO cost_analysis flops /
+    PEAK_FLOPS on the compiled program."""
+    from .costterms import graph_compute_seconds
+    cur = g
+    for ax, assign in zip(axes, per_axis):
+        cur = cur.divided(assign, ax.size)
+    return graph_compute_seconds(cur, compute)
 
 
 def _solve_mesh_job(payload) -> TilingSolution:
@@ -578,7 +613,8 @@ def solve_mesh_capacity(g: Graph, axes: Sequence[MeshAxis],
                         hbm: float = 16e9, budget_frac: float = 0.7,
                         beam: BeamSpec = "auto",
                         max_rounds: int = 5,
-                        workers: Optional[int] = None) -> TilingSolution:
+                        workers: Optional[int] = None,
+                        compute=None) -> TilingSolution:
     """Dual ascent on the capacity Lagrangian: solve, check the hard
     per-device persistent-bytes budget, escalate the penalty scale until
     the plan fits (beyond-paper: the paper's objective is communication
@@ -611,7 +647,8 @@ def solve_mesh_capacity(g: Graph, axes: Sequence[MeshAxis],
         # scale is known, drop pending jobs without waiting on running
         # ones (shutdown(wait=False, cancel_futures=True) — their
         # results are discarded)
-        payloads = [(g, axes, {"beam": beam, "mem_scale": sc})
+        payloads = [(g, axes,
+                     {"beam": beam, "mem_scale": sc, "compute": compute})
                     for sc in scales]
         try:
             from concurrent.futures import ProcessPoolExecutor
@@ -634,7 +671,7 @@ def solve_mesh_capacity(g: Graph, axes: Sequence[MeshAxis],
     if not parallel_ok:
         for i, sc in enumerate(scales):
             sol = solve_mesh(g, axes, beam=beam, mem_scale=sc,
-                             cost_cache=cost_cache)
+                             cost_cache=cost_cache, compute=compute)
             if feasible(sol):
                 raw_ok = i == 0
                 break
@@ -650,26 +687,34 @@ def solve_mesh_capacity(g: Graph, axes: Sequence[MeshAxis],
                     pins[name] = assign[name]
         fixed_per_axis[ax.name] = pins
     return solve_mesh(g, axes, fixed_per_axis=fixed_per_axis, beam=beam,
-                      mem_scale=0.0, cost_cache=cost_cache)
+                      mem_scale=0.0, cost_cache=cost_cache, compute=compute)
 
 
 def composed_cost(g: Graph, axes: Sequence[MeshAxis],
                   per_axis: Sequence[Assignment],
-                  naive: bool = False) -> float:
+                  naive: bool = False, mem_scale: float = 0.0,
+                  terms: Sequence = (), compute=None) -> float:
     """Total weighted bytes of an arbitrary composed tiling (for comparing
-    canonical DP/MP strategies against the solver's choice)."""
+    canonical DP/MP strategies against the solver's choice).  With the
+    same ``mem_scale``/``terms``/``compute`` knobs as solve_mesh this
+    reprices its exact objective (solve == reprice)."""
     cur = g
     groups = 1
     total = 0.0
     for ax, assign in zip(axes, per_axis):
-        total += graph_cost(cur, assign, ax.size, naive=naive) * groups
+        total += graph_cost(cur, assign, ax.size, naive=naive,
+                            mem_scale=mem_scale,
+                            terms=_axis_terms(terms, compute, ax)) * groups
         cur = cur.divided(assign, ax.size)
         groups *= ax.size
     return total
 
 
 def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
-                       per_axis: Sequence[Assignment]) -> Dict[str, object]:
+                       per_axis: Sequence[Assignment],
+                       mem_scale: float = 0.0,
+                       terms: Sequence = (),
+                       compute=None) -> Dict[str, object]:
     """Attribute a composed tiling's predicted bytes to collective kinds
     and tensor roles, walking the same k-cut recursion as
     :func:`composed_cost` (totals match it exactly).  Returns
@@ -678,6 +723,12 @@ def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
     comparable to ``hlo.collect(...).wire_bytes_per_device × n_devices``
     on the compiled program (repro.verify.calibration).
 
+    ``by_term`` attributes the solver objective per cost term:
+    "conversion" is the wire-byte total above; each extra term
+    (capacity via ``mem_scale``, explicit ``terms``, the kernel-aware
+    ``compute`` config) adds its own weighted penalty bucket, so
+    ``sum(by_term.values())`` == composed_cost under the same knobs.
+
     ``by_phase`` splits the same total by op provenance (builder naming
     convention): ``update`` = parameter-update ops (``upd:*``) — these
     carry the ZeRO-style optimizer-state collectives (dW reduce-scatter
@@ -685,6 +736,7 @@ def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
     update); ``backward`` = mirrored backward/grad-accumulation ops;
     ``forward`` = everything else."""
     from .cost import op_cost_detail
+    from .costterms import CapacityTerm
     cur = g
     groups = 1
     total = 0.0
@@ -692,6 +744,9 @@ def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
     by_role: Dict[str, float] = {}
     by_axis: Dict[str, float] = {}
     by_phase: Dict[str, float] = {}
+    by_term: Dict[str, float] = {"conversion": 0.0}
+    base_terms = ((CapacityTerm(scale=mem_scale),) if mem_scale else ()) \
+        + tuple(terms)
 
     def phase_of(op) -> str:
         if op.name.startswith("upd:"):
@@ -715,10 +770,17 @@ def solution_breakdown(g: Graph, axes: Sequence[MeshAxis],
                 by_role[r["role"]] = by_role.get(r["role"], 0.0) + b
         by_axis[ax.name] = axis_total
         total += axis_total
+        by_term["conversion"] += axis_total
+        for term in _axis_terms(base_terms, compute, ax):
+            pen = term.penalties(cur, ax.size)
+            v = sum(per.get(assign.get(t, REPLICATE), 0.0)
+                    for t, per in pen.items()) * groups
+            by_term[term.name] = by_term.get(term.name, 0.0) + v
+            total += v
         cur = cur.divided(assign, ax.size)
         groups *= ax.size
     return {"total": total, "by_kind": by_kind, "by_role": by_role,
-            "by_axis": by_axis, "by_phase": by_phase}
+            "by_axis": by_axis, "by_phase": by_phase, "by_term": by_term}
 
 
 def assignment_cost_naive(g: Graph, axes: Sequence[MeshAxis],

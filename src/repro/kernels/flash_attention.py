@@ -39,9 +39,9 @@ def _clean(x, valid):
 # forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
-                m_scr, l_scr, acc_scr, *,
-                scale, causal, window, block_q, block_k, sq, sk):
+def _fwd_tile(q_ref, k_ref, v_ref, o_ref, lse_ref,
+              m_scr, l_scr, acc_scr, *, q_off,
+              scale, causal, window, block_q, block_k, sq, sk):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -58,11 +58,15 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
     k = _clean(k_ref[...].astype(jnp.float32), kvalid)          # [bk, hd]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+    # q_row is chunk-local (validity vs the padded tile); q_pos is the
+    # absolute sequence position (causal/window), offset by q_off when the
+    # query block is a prefill chunk appended at cache position q_off.
+    q_row = qi * block_q + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 0)
     k_pos = ki * block_k + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1)
-    mask = (k_pos < sk) & (q_pos < sq)
+    mask = (k_pos < sk) & (q_row < sq)
+    q_pos = q_row + q_off
     if causal:
         mask &= k_pos <= q_pos
     if window is not None:
@@ -87,11 +91,36 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
         lse_ref[...] = (m_scr[...] + jnp.log(l)).astype(lse_ref.dtype)
 
 
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, **kw):
+    _fwd_tile(q_ref, k_ref, v_ref, o_ref, lse_ref,
+              m_scr, l_scr, acc_scr, q_off=0, **kw)
+
+
+def _fwd_kernel_off(off_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                    m_scr, l_scr, acc_scr, **kw):
+    # scalar-prefetch variant: off_ref is an SMEM [1] int32 with the
+    # (possibly traced) absolute position of query row 0.
+    _fwd_tile(q_ref, k_ref, v_ref, o_ref, lse_ref,
+              m_scr, l_scr, acc_scr, q_off=off_ref[0], **kw)
+
+
+def _check_gqa(h: int, kv: int):
+    if kv <= 0 or h % kv != 0:
+        raise ValueError(
+            f"GQA head mapping needs q_heads divisible by kv_heads, got "
+            f"h={h} kv={kv}")
+
+
 def flash_attention_fwd(q, k, v, *, causal=True, window=None,
-                        scale=None, block_q=128, block_k=128,
-                        interpret=False):
+                        scale=None, q_offset=None,
+                        block_q=128, block_k=128, interpret=False):
+    """Forward flash attention; ``q_offset`` (None | int | traced scalar)
+    shifts the queries' absolute positions for chunked prefill, with the
+    offset fed through scalar prefetch so it may be a traced value."""
     b, sq, h, hd = q.shape
     _, sk, kv, _ = k.shape
+    _check_gqa(h, kv)
     g = h // kv
     scale = scale if scale is not None else hd ** -0.5
     block_q = min(block_q, sq)
@@ -99,41 +128,163 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=None,
     nq = pl.cdiv(sq, block_q)
     nk = pl.cdiv(sk, block_k)
 
-    kernel = functools.partial(
-        _fwd_kernel, scale=scale, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, sq=sq, sk=sk)
-
+    kw = dict(scale=scale, causal=causal, window=window,
+              block_q=block_q, block_k=block_k, sq=sq, sk=sk)
     out_shapes = (
         jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
         jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
     )
-    o, lse = pl.pallas_call(
-        kernel,
+    scratch = [
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q, hd), jnp.float32),
+    ]
+    ins = (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+           v.transpose(0, 2, 1, 3))
+
+    if q_offset is None:
+        o, lse = pl.pallas_call(
+            functools.partial(_fwd_kernel, **kw),
+            grid=(b, h, nq, nk),
+            in_specs=[
+                pl.BlockSpec((None, None, block_q, hd),
+                             lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+                pl.BlockSpec((None, None, block_k, hd),
+                             lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+                pl.BlockSpec((None, None, block_k, hd),
+                             lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+            ],
+            out_specs=(
+                pl.BlockSpec((None, None, block_q, hd),
+                             lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+                pl.BlockSpec((None, None, block_q),
+                             lambda bb, hh, qi, ki: (bb, hh, qi)),
+            ),
+            scratch_shapes=scratch,
+            out_shape=out_shapes,
+            interpret=interpret,
+        )(*ins)
+        return o.transpose(0, 2, 1, 3), lse
+
+    off = jnp.asarray(q_offset, jnp.int32).reshape((1,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(b, h, nq, nk),
         in_specs=[
             pl.BlockSpec((None, None, block_q, hd),
-                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+                         lambda bb, hh, qi, ki, off: (bb, hh, qi, 0)),
             pl.BlockSpec((None, None, block_k, hd),
-                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+                         lambda bb, hh, qi, ki, off, g=g:
+                         (bb, hh // g, ki, 0)),
             pl.BlockSpec((None, None, block_k, hd),
-                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+                         lambda bb, hh, qi, ki, off, g=g:
+                         (bb, hh // g, ki, 0)),
         ],
         out_specs=(
             pl.BlockSpec((None, None, block_q, hd),
-                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+                         lambda bb, hh, qi, ki, off: (bb, hh, qi, 0)),
             pl.BlockSpec((None, None, block_q),
-                         lambda bb, hh, qi, ki: (bb, hh, qi)),
+                         lambda bb, hh, qi, ki, off: (bb, hh, qi)),
         ),
-        scratch_shapes=[
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, hd), jnp.float32),
-        ],
+        scratch_shapes=scratch,
+    )
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel_off, **kw),
+        grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
-    )(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-      v.transpose(0, 2, 1, 3))
+    )(off, *ins)
     return o.transpose(0, 2, 1, 3), lse
+
+
+# ---------------------------------------------------------------------------
+# decode (one query token per slot against the serving engine's KV cache)
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, window, block_k):
+    bb = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[bb]
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k,), 0)
+    valid = k_pos < length          # also masks tile padding (length <= S)
+    if window is not None:
+        valid &= k_pos >= length - window
+
+    q = q_ref[...].astype(jnp.float32) * scale            # [g, hd]
+    k = _clean(k_ref[...].astype(jnp.float32), valid)     # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [g, bk]
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + p.sum(-1)
+    v = _clean(v_ref[...].astype(jnp.float32), valid)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot(p.astype(v.dtype), v))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_decode(q, k_cache, v_cache, lengths, *, window=None,
+                           scale=None, block_k=128, interpret=False):
+    """One decode step: q [B, H, hd] against the slot cache
+    [B, S, KV, hd] with per-slot valid ``lengths`` [B] (the serving
+    engine's slot semantics: positions >= length are dead, an optional
+    sliding ``window`` keeps only the last ``window`` of them).  GQA is
+    blocked like attend_cache: head h belongs to kv group h // g."""
+    b, h, hd = q.shape
+    _, s, kv, _ = k_cache.shape
+    _check_gqa(h, kv)
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    block_k = min(block_k, s)
+    nk = pl.cdiv(s, block_k)
+    qg = q.reshape(b, kv, g, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec((None, None, g, hd),
+                         lambda bb, kvi, ki, L: (bb, kvi, 0, 0)),
+            pl.BlockSpec((None, block_k, None, hd),
+                         lambda bb, kvi, ki, L: (bb, ki, kvi, 0)),
+            pl.BlockSpec((None, block_k, None, hd),
+                         lambda bb, kvi, ki, L: (bb, ki, kvi, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, hd),
+                               lambda bb, kvi, ki, L: (bb, kvi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          block_k=block_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), qg, k_cache, v_cache)
+    return o.reshape(b, h, hd)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +374,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
                         interpret=False):
     b, sq, h, hd = q.shape
     _, sk, kv, _ = k.shape
+    _check_gqa(h, kv)
     g = h // kv
     scale = scale if scale is not None else hd ** -0.5
     block_q = min(block_q, sq)

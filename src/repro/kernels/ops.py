@@ -2,11 +2,18 @@
 
 `flash_attention` carries a custom_vjp wired to the Pallas backward
 kernels.  On this CPU container the kernels execute in interpret mode
-(Pallas-TPU cannot compile to CPU); on a real TPU set interpret=False
-(the default flips on backend)."""
+(Pallas-TPU cannot compile to CPU); on a real TPU interpret=False.
+
+The mode is resolved ONCE (cached) so every call in a compiled program
+agrees, and `REPRO_PALLAS_INTERPRET` overrides the backend heuristic
+(=1 forces interpret, =0 forces compiled) — TPU CI and the CPU container
+both get a deterministic mode.  Tests that flip the env var must call
+``_default_interpret.cache_clear()``.
+"""
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -15,8 +22,17 @@ import jax.numpy as jnp
 from . import flash_attention as fa
 from . import ssd as ssd_mod
 
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
 
+
+@functools.lru_cache(maxsize=None)
 def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
     return jax.default_backend() != "tpu"
 
 
@@ -46,6 +62,30 @@ def _fa_bwd(causal, window, scale, res, do):
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention_offset(q, k, v, q_offset, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None):
+    """Forward-only flash attention with a (possibly traced) query
+    offset — the chunked-prefill path, where the q block sits at cache
+    position ``q_offset`` against keys 0..sk.  No vjp: prefill/decode
+    serving never differentiates, and the offset being a traced value
+    rules out the nondiff_argnums route the trainable kernel uses."""
+    o, _ = fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                  scale=scale, q_offset=q_offset,
+                                  interpret=_default_interpret())
+    return o
+
+
+def flash_attention_decode(q, k_cache, v_cache, lengths, *,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None):
+    """One decode step against the serving engine's slot cache (per-slot
+    ``lengths``, optional sliding window).  Forward-only."""
+    return fa.flash_attention_decode(q, k_cache, v_cache, lengths,
+                                     window=window, scale=scale,
+                                     interpret=_default_interpret())
 
 
 def ssd_chunk_scan(xh, a_log, bb, cc, chunk: int = 128):

@@ -51,13 +51,19 @@ def solve_cell_plan(cfg: ArchConfig, shape: ShapeConfig,
                     use_cache: bool = True,
                     capacity: bool = False,
                     beam="auto",
-                    graph_kwargs: Optional[Dict[str, Any]] = None
-                    ) -> Dict[str, Any]:
+                    graph_kwargs: Optional[Dict[str, Any]] = None,
+                    compute=None) -> Dict[str, Any]:
     """Solve (or load from cache) the tiling plan record for one cell on
     explicit solver axes.  ``graph_kwargs`` are forwarded to
     ``build_graph`` (the training engine solves with ``master_fp32`` /
     ``error_feedback`` matching its runtime policy — callers must fold
-    the flags into ``mesh_name`` so cache entries stay distinct)."""
+    the flags into ``mesh_name`` so cache entries stay distinct).
+
+    ``compute``: optional core.costterms.ComputeConfig making the solve
+    kernel-aware; its ``token()`` is folded into the cache key so plans
+    solved under different compute configs never share an entry."""
+    if compute is not None:
+        mesh_name = f"{mesh_name}_{compute.token()}"
     path = plan_cache_path(cfg.name, shape.name, mesh_name)
     if use_cache and os.path.exists(path):
         with open(path) as f:
@@ -66,9 +72,9 @@ def solve_cell_plan(cfg: ArchConfig, shape: ShapeConfig,
     t0 = time.time()
     if capacity:
         from ..core.solver import solve_mesh_capacity
-        sol = solve_mesh_capacity(g, axes, beam=beam)
+        sol = solve_mesh_capacity(g, axes, beam=beam, compute=compute)
     else:
-        sol = solve_mesh(g, axes, beam=beam)
+        sol = solve_mesh(g, axes, beam=beam, compute=compute)
     plan = ShardingPlan.from_graph_solution(sol, g)
     rec = {
         "mesh_axes": list(plan.mesh_axis_names),
@@ -78,6 +84,10 @@ def solve_cell_plan(cfg: ArchConfig, shape: ShapeConfig,
         "total_seconds": sol.total_seconds,
         "solve_time": time.time() - t0,
     }
+    if compute is not None:
+        from ..core.solver import solution_compute_seconds
+        rec["compute_seconds"] = solution_compute_seconds(
+            g, axes, sol.per_axis, compute)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
     return rec

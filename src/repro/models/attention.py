@@ -82,12 +82,75 @@ def flash_attention_xla(q, k, v, *, causal: bool = True,
     return out.reshape(b, sq, h, hd).astype(q.dtype)
 
 
+def _spec_entries(pspec, n):
+    """Normalize a PartitionSpec to exactly n entries (None-padded)."""
+    e = tuple(pspec)
+    return e + (None,) * (n - len(e))
+
+
+def _axes_degree(mesh, entry) -> int:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    d = 1
+    for nm in names:
+        d *= int(dict(mesh.shape)[nm])
+    return d
+
+
+def attend_cache_pallas(q, k_cache, v_cache, length, *,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None,
+                        mesh=None, plan=None):
+    """Pallas decode kernel path.  With a mesh + plan the kernel runs
+    under shard_map with the plan's solved kv_cache sharding (batch and
+    kv_heads dims); a seq_kv cut — which would split the softmax — or a
+    non-dividing degree falls back to the XLA path rather than computing
+    a partial reduction."""
+    from ..kernels import ops as kops
+
+    if mesh is None or plan is None:
+        return kops.flash_attention_decode(q, k_cache, v_cache, length,
+                                           window=window, scale=scale)
+
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, h, hd = q.shape
+    _, _, kv, _ = k_cache.shape
+    cspec = _spec_entries(
+        plan.pspec("kv_cache", ("batch", "seq_kv", "kv_heads", "hd")), 4)
+    bs, ss, hs, ds = cspec
+    ok = (ss is None and ds is None
+          and (bs is None or b % _axes_degree(mesh, bs) == 0
+               and length.shape[0] % _axes_degree(mesh, bs) == 0)
+          and (hs is None or kv % _axes_degree(mesh, hs) == 0
+               and h % _axes_degree(mesh, hs) == 0))
+    if not ok:
+        return attend_cache(q, k_cache, v_cache, length,
+                            window=window, scale=scale)
+    fn = shard_map(
+        partial(kops.flash_attention_decode, window=window, scale=scale),
+        mesh=mesh,
+        in_specs=(P(bs, hs, None), P(bs, None, hs, None),
+                  P(bs, None, hs, None), P(bs)),
+        out_specs=P(bs, hs, None),
+        check_rep=False)
+    return fn(q, k_cache, v_cache, length)
+
+
 def attend_cache(q, k_cache, v_cache, length, *,
                  window: Optional[int] = None,
-                 scale: Optional[float] = None):
+                 scale: Optional[float] = None,
+                 impl: str = "xla", mesh=None, plan=None):
     """Decode attention: q [B, H, hd] against caches [B, S, KV, hd];
     ``length`` [B] = number of valid cache entries (new token already
-    written at position length-1)."""
+    written at position length-1).  impl="pallas" routes through the
+    fused decode kernel (shard_map-wrapped when mesh/plan are given)."""
+    if impl == "pallas":
+        return attend_cache_pallas(q, k_cache, v_cache, length,
+                                   window=window, scale=scale,
+                                   mesh=mesh, plan=plan)
     b, h, hd = q.shape
     _, s, kv, _ = k_cache.shape
     g = h // kv
@@ -107,5 +170,24 @@ def attend_cache(q, k_cache, v_cache, length, *,
 def attention(q, k, v, *, impl: str = "xla", **kw):
     if impl == "pallas":
         from ..kernels import ops as kops
-        return kops.flash_attention(q, k, v, **kw)
+        # The fused kernel scans all of k; the XLA path's k_chunk is a
+        # scan-tiling knob with no kernel equivalent — drop it.
+        kw.pop("k_chunk", None)
+        q_offset = kw.pop("q_offset", 0)
+        unknown = set(kw) - {"causal", "window", "scale"}
+        if unknown:
+            raise TypeError(
+                f"attention(impl='pallas') got unsupported kwargs "
+                f"{sorted(unknown)}")
+        causal = kw.get("causal", True)
+        window = kw.get("window")
+        scale = kw.get("scale")
+        static_zero = isinstance(q_offset, int) and q_offset == 0
+        if static_zero:
+            return kops.flash_attention(q, k, v, causal, window, scale)
+        # traced / nonzero offset: forward-only offset kernel (chunked
+        # prefill never differentiates)
+        return kops.flash_attention_offset(q, k, v, q_offset,
+                                           causal=causal, window=window,
+                                           scale=scale)
     return flash_attention_xla(q, k, v, **kw)

@@ -8,6 +8,7 @@ with a_t = exp(dt_t * A) per head (A < 0), B/C shared across heads
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
@@ -117,7 +118,73 @@ def ssd_scan(xh, a_log, bb, cc, chunk: int):
     return y, s_final
 
 
-def mamba_forward(params, x, cfg: ArchConfig, plan=None):
+def _ssd_pallas_impl(xh, a_log, bb, cc, chunk):
+    from ..kernels import ops as kops
+    return kops.ssd_chunk_scan(xh, a_log, bb, cc, chunk=chunk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _ssd_pallas(xh, a_log, bb, cc, chunk):
+    """Pallas SSD chunk-scan with the XLA chunked formulation as the
+    backward (no hand-written bwd kernel yet; ``ssd_scan`` recomputes the
+    forward under jax.vjp, so gradients are exact w.r.t. the XLA math and
+    agree with the kernel to its fwd parity tolerance)."""
+    return _ssd_pallas_impl(xh, a_log, bb, cc, chunk)
+
+
+def _ssd_pallas_fwd(xh, a_log, bb, cc, chunk):
+    return _ssd_pallas_impl(xh, a_log, bb, cc, chunk), (xh, a_log, bb, cc)
+
+
+def _ssd_pallas_bwd(chunk, res, dy):
+    xh, a_log, bb, cc = res
+    _, vjp = jax.vjp(lambda *t: ssd_scan(*t, chunk)[0], xh, a_log, bb, cc)
+    return vjp(dy.astype(jnp.float32))
+
+
+_ssd_pallas.defvjp(_ssd_pallas_fwd, _ssd_pallas_bwd)
+
+
+def _ssd_dispatch(xh, a_log, bb, cc, chunk: int, impl: str,
+                  plan=None, mesh=None):
+    """Route the SSD scan: impl="pallas" pads the sequence to a chunk
+    multiple (the kernel grid wants S % chunk == 0) and runs the Pallas
+    kernel, under shard_map on the plan's batch sharding when a mesh is
+    present (pallas_call has no GSPMD partitioning rule).  Returns y
+    only; the XLA path stays the source of the final state."""
+    if impl != "pallas":
+        return ssd_scan(xh, a_log, bb, cc, chunk)[0]
+    b, s, h, p = xh.shape
+    q = min(chunk, s)
+    nc = (s + q - 1) // q
+    pad = nc * q - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    if mesh is None or plan is None:
+        return _ssd_pallas(xh, a_log, bb, cc, q)[:, :s]
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from .attention import _axes_degree, _spec_entries
+
+    bs = _spec_entries(plan.pspec("ssm_h", ("batch", "seq", "inner")), 3)[0]
+    if bs is not None and b % _axes_degree(mesh, bs) != 0:
+        bs = None
+    fn = shard_map(
+        lambda x_, a_, b_, c_: _ssd_pallas(x_, a_, b_, c_, q), mesh=mesh,
+        in_specs=(P(bs, None, None, None), P(bs, None, None),
+                  P(bs, None, None), P(bs, None, None)),
+        out_specs=P(bs, None, None, None),
+        check_rep=False)
+    return fn(xh, a_log, bb, cc)[:, :s]
+
+
+def mamba_forward(params, x, cfg: ArchConfig, plan=None, *,
+                  impl: str = "xla", mesh=None):
     """x: [B, S, D] -> [B, S, D] (training / prefill; returns no state)."""
     b, s, d = x.shape
     di, n = cfg.d_inner, cfg.ssm.state_dim
@@ -137,7 +204,8 @@ def mamba_forward(params, x, cfg: ArchConfig, plan=None):
     a = -jnp.exp(params["A_log"])                      # [H]
     a_log = dt * a                                     # [B,S,H]
     xh = xs.reshape(b, s, h, p) * dt[..., None]
-    y, _ = ssd_scan(xh, a_log, bb, cc, cfg.ssm.chunk)
+    y = _ssd_dispatch(xh, a_log, bb, cc, cfg.ssm.chunk, impl,
+                      plan=plan, mesh=mesh)
     y = y + params["D"][None, None, :, None] * xs.reshape(b, s, h, p)
     y = y.reshape(b, s, di)
     y = y * jax.nn.silu(z.astype(jnp.float32))

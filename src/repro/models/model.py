@@ -170,6 +170,7 @@ class LM:
     cfg: ArchConfig
     plan: Any = None                 # ShardingPlan or None
     attn_impl: str = "xla"           # "xla" | "pallas"
+    ssd_impl: str = "xla"            # "xla" | "pallas" (ssm/hybrid scan)
     mesh: Any = None                 # needed for shard_map MoE dispatch
     # "scan": lax.scan over stacked layers (production; one-layer HLO).
     # "unrolled": python loop — used by the dry-run cost probes because
@@ -265,7 +266,8 @@ class LM:
             def mamba_body(x, p):
                 xn = shard(rms_norm(x, p["ln"], cfg.norm_eps), self.plan,
                            "x", ("batch", "seq", "d_model"))
-                y = mamba_forward(p, xn, cfg, self.plan)
+                y = mamba_forward(p, xn, cfg, self.plan,
+                                  impl=self.ssd_impl, mesh=self.mesh)
                 return shard(x + y, self.plan, "x",
                              ("batch", "seq", "d_model"))
 
@@ -303,7 +305,8 @@ class LM:
             def body(x, p):
                 xn = shard(rms_norm(x, p["ln"], cfg.norm_eps), self.plan,
                            "x", ("batch", "seq", "d_model"))
-                y = mamba_forward(p, xn, cfg, self.plan)
+                y = mamba_forward(p, xn, cfg, self.plan,
+                                  impl=self.ssd_impl, mesh=self.mesh)
                 return shard(x + y, self.plan, "x",
                              ("batch", "seq", "d_model"))
 
@@ -391,7 +394,9 @@ class LM:
         vc = jax.vmap(lambda c, i, val: c.at[i].set(val))(
             kv_cache["v"], slot, v.astype(jnp.bfloat16))
         length = jnp.minimum(pos + 1, kc.shape[1])
-        o = attend_cache(q, kc, vc, length, window=None)
+        o = attend_cache(q, kc, vc, length, window=None,
+                         impl=self.attn_impl, mesh=self.mesh,
+                         plan=self.plan)
         return (o.reshape(b, h * hd) @ p["wo"],
                 {"k": kc, "v": vc})
 
@@ -579,8 +584,12 @@ class LM:
                                           mode="drop")
         vc = kv_cache["v"].at[:, idx].set(v.astype(jnp.bfloat16),
                                           mode="drop")
-        o = flash_attention_xla(q, kc, vc, causal=True,
-                                q_offset=positions[0, 0])
+        # Pallas offset kernel only unsharded: the prefill jit is GSPMD-
+        # partitioned when a mesh is present, and pallas_call has no
+        # partitioning rule there (decode goes through shard_map instead).
+        impl = self.attn_impl if self.mesh is None else "xla"
+        o = attention(q, kc, vc, causal=True, q_offset=positions[0, 0],
+                      impl=impl)
         return o.reshape(b, c, h * hd) @ p["wo"], {"k": kc, "v": vc}
 
     def _prefill_chunk_attn(self, params, sub, tokens, n_valid):

@@ -54,6 +54,11 @@ class ServeConfig:
     temperature: float = 0.0       # 0 -> greedy
     top_k: int = 0                 # 0 -> full distribution
     seed: int = 0
+    # "auto" | "xla" | "pallas" — decode-step attention kernel; auto
+    # resolves to the Pallas decode kernel on TPU, XLA elsewhere (the
+    # kernel-routed path is exercised on CPU via interpret mode by the
+    # parity tests / kernels-smoke cell, not in production serving)
+    attn_impl: str = "auto"
 
 
 @dataclasses.dataclass
@@ -116,8 +121,13 @@ class Server:
             sizes = dict(zip(self.mesh.axis_names,
                              self.mesh.devices.shape))
             self.plan = self.plan.for_pool(n, sizes)
+        attn_impl = scfg.attn_impl
+        if attn_impl == "auto":
+            attn_impl = ("pallas" if jax.default_backend() == "tpu"
+                         else model.attn_impl)
         self.model = dataclasses.replace(model, plan=self.plan,
-                                         mesh=self.mesh)
+                                         mesh=self.mesh,
+                                         attn_impl=attn_impl)
 
         # host-side scheduler state
         self.active = np.zeros((n,), bool)

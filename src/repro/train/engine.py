@@ -54,6 +54,10 @@ class EngineConfig:
     grad_compression: bool = False  # error-feedback int8 sync
     master_fp32: bool = True       # bf16 compute / f32 master weights
     optim: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    # "auto" | "xla" | "pallas" — SSD chunk-scan kernel in the microbatch
+    # step (ssm/hybrid families); auto resolves to Pallas on TPU, XLA
+    # elsewhere (CPU interpret mode is for parity tests, not throughput)
+    kernels: str = "auto"
 
 
 class TrainEngine:
@@ -70,8 +74,18 @@ class TrainEngine:
 
     def __init__(self, model: LM, cfg: Optional[EngineConfig] = None,
                  mesh=None):
-        self.model = model
         self.cfg = cfg or EngineConfig()
+        # duck-typed models (e.g. pipeline _StackModel) have no ssd_impl
+        # and nothing to re-route — only re-dispatch real LMs
+        model_impl = getattr(model, "ssd_impl", None)
+        if model_impl is not None:
+            ssd_impl = self.cfg.kernels
+            if ssd_impl == "auto":
+                ssd_impl = ("pallas" if jax.default_backend() == "tpu"
+                            else model_impl)
+            if ssd_impl != model_impl:
+                model = dataclasses.replace(model, ssd_impl=ssd_impl)
+        self.model = model
         self.mesh = mesh if mesh is not None else model.mesh
         self.plan = model.plan
         self._jit = None

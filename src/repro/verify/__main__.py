@@ -62,6 +62,8 @@ def main(argv=None) -> int:
               f" train")
         print(f"{'pipeline':16s} {'(stage runner cell)':22s} "
               f"{'dense':12s} train")
+        print(f"{'compute':16s} {'(kernel-aware cell)':22s} "
+              f"{'3 families':12s} calib")
         return 0
 
     import jax
@@ -97,12 +99,13 @@ def main(argv=None) -> int:
         with_trace = names is None or "trace" in names
         with_train = names is None or "train-engine" in names
         with_pipeline = names is None or "pipeline" in names
+        with_compute = names is None or "compute" in names
         if names is None:
             specs = get_cells(None)
         else:
             names = [n for n in names
                      if n not in ("serve", "trace", "train-engine",
-                                  "pipeline")]
+                                  "pipeline", "compute")]
             specs = get_cells(names) if names else []
         mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
         recs = run_cells(specs, mesh, numerics=not args.no_numerics,
@@ -155,6 +158,22 @@ def main(argv=None) -> int:
                       f"({time.time() - t0:.0f}s)", flush=True)
                 if prec["status"] == "error":
                     print(prec["traceback"], flush=True)
+        if with_compute:
+            from .compute_cell import run_compute_cell
+            t0 = time.time()
+            crec = run_compute_cell(mesh)
+            report["compute"] = crec
+            ok &= crec["status"] == "ok"
+            if not args.json:
+                ratios = " ".join(
+                    f"{c['cell']}={c.get('ratio', float('nan')):.2f}"
+                    for c in crec.get("cells", []))
+                cal = crec.get("calibration_fit", {}).get("calibration")
+                print(f"[{crec['status']}] {'compute':16s} "
+                      f"cal={cal if cal is None else f'{cal:.3f}'} "
+                      f"{ratios} ({time.time() - t0:.0f}s)", flush=True)
+                if crec["status"] == "error":
+                    print(crec["traceback"], flush=True)
         if with_trace:
             from .trace_cell import run_trace_cell
             t0 = time.time()

@@ -1,0 +1,137 @@
+"""Kernel-aware compute calibration pseudo-cell.
+
+The ComputeTerm prices per-op compute time inside the tiling DP; this
+cell checks that pricing against real compiled artifacts, measured the
+way analysis/roofline.py (and tests/test_roofline.py) measures them:
+
+  1. solve each cell's tiling WITH the compute config enabled
+  2. compile the sharded step on the forced-host verification mesh and
+     run ``roofline.analyze`` on the executable — HLO cost_analysis
+     flops / peak is the measured compute time, ring wire bytes / link
+     bandwidth the measured collective time
+  3. fit ``calibration`` (measured-over-analytic flops ratio,
+     Roofline.compute_calibration) on the FIRST cell only
+  4. on every other cell, predicted step time =
+     calibration × solution_compute_seconds + predicted wire seconds
+     must sit within the standard calibration band of measured
+     t_compute + t_collective
+
+The gated comparison deliberately excludes the HBM-traffic roofline
+term: the solver models compute and communication, not memory traffic,
+and on reduced cells "bytes accessed" dwarfs the tiny flop counts.  The
+full three-term ``t_step`` is reported ungated for the record.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+from ..core.builders import build_graph
+from ..core.costterms import ComputeConfig
+from ..core.plan import ShardingPlan
+from ..core.solver import (TilingSolution, solution_breakdown,
+                           solution_compute_seconds, solve_mesh)
+from .calibration import (RATIO_HI, RATIO_LO, _moe_pins,
+                          faithful_assignments, verify_axes)
+from .cells import MESH_AXES, MESH_SHAPE, N_DEVICES, get_cells
+
+# first entry fits the calibration; the rest are band-checked with it
+CAL_CELLS = ("dense-train", "gqa-prefill", "xlstm-train")
+
+
+def _axis_seconds(axes, by_axis: Dict[str, float]) -> float:
+    """Predicted collective seconds of a composed tiling: each axis'
+    weighted bytes (cost × groups) back through the solve_mesh currency
+    — one axis-k byte is 1/(bw_k × a_k) seconds, charged per group."""
+    total = 0.0
+    groups = 1
+    for ax in axes:
+        total += by_axis.get(ax.name, 0.0) / (groups * ax.bandwidth
+                                              * ax.size)
+        groups *= ax.size
+    return total
+
+
+def run_compute_cell(mesh=None) -> Dict[str, object]:
+    import jax
+
+    from ..analysis.roofline import analyze, model_train_flops
+    from ..compat import make_compat_mesh
+    from ..launch.compile import (compile_step, input_specs,
+                                  normalize_moe_plan)
+    from ..launch.mesh import PEAK_FLOPS
+
+    rec: Dict[str, object] = {
+        "cell": "compute",
+        "mesh": dict(zip(MESH_AXES, MESH_SHAPE)),
+        "cells": [],
+        "band": [RATIO_LO, RATIO_HI],
+    }
+    if mesh is None:
+        mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
+    axes = verify_axes()
+    n_dev = N_DEVICES
+    cc = ComputeConfig(peak_flops=PEAK_FLOPS)   # calibration fitted below
+    try:
+        calibration = None
+        gates: List[bool] = []
+        for spec in get_cells(list(CAL_CELLS)):
+            cfg, shape = spec.cfg(), spec.shape()
+            t0 = time.time()
+            g = build_graph(cfg, shape)
+            sol = solve_mesh(g, axes, compute=cc,
+                             fixed_per_axis=_moe_pins(g, cfg, axes))
+            executed = faithful_assignments(g, sol.per_axis)
+            bd = solution_breakdown(g, axes, executed)
+            analytic_sec = solution_compute_seconds(g, axes, executed, cc)
+            pred_wire_sec = _axis_seconds(axes, bd["by_axis"])
+
+            exec_sol = TilingSolution(list(axes), executed,
+                                      [0.0] * len(axes), 0.0, 0.0)
+            plan = normalize_moe_plan(
+                ShardingPlan.from_graph_solution(exec_sol, g), cfg)
+            compiled, _, _ = compile_step(cfg, shape, plan, mesh,
+                                          input_specs(cfg, shape))
+            rl = analyze(compiled, compiled.as_text(), n_dev,
+                         model_train_flops(cfg, shape), spec.arch,
+                         shape.name, "verify")
+
+            analytic_flops_total = analytic_sec * PEAK_FLOPS * n_dev
+            if calibration is None:
+                calibration = rl.compute_calibration(analytic_flops_total)
+                rec["calibration_fit"] = {
+                    "cell": spec.name, "calibration": calibration,
+                    "measured_flops_per_dev": rl.flops_per_dev,
+                    "analytic_flops_total": analytic_flops_total,
+                }
+                gates.append(calibration > 0)
+
+            predicted = calibration * analytic_sec + pred_wire_sec
+            measured = rl.t_compute + rl.t_collective
+            crec: Dict[str, object] = {
+                "cell": spec.name,
+                "predicted_step_s": predicted,
+                "measured_step_s": measured,
+                "analytic_compute_s": analytic_sec,
+                "predicted_wire_s": pred_wire_sec,
+                "t_compute": rl.t_compute,
+                "t_collective": rl.t_collective,
+                "t_step_3term": rl.t_step,     # ungated (includes HBM)
+                "solve_plus_compile_s": time.time() - t0,
+            }
+            if predicted > 0:
+                crec["ratio"] = measured / predicted
+            fitted = rec["calibration_fit"]["cell"] == spec.name
+            crec["gated"] = not fitted
+            crec["ok"] = bool(
+                fitted or (predicted > 0 and
+                           RATIO_LO <= measured / predicted <= RATIO_HI))
+            gates.append(crec["ok"])
+            rec["cells"].append(crec)
+        rec["status"] = "ok" if all(gates) else "fail"
+    except Exception as e:
+        import traceback
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=8)
+    return rec

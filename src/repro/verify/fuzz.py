@@ -173,6 +173,7 @@ class FuzzResult:
     exec_checked: int = 0
     trace_checked: int = 0
     trace_exec_checked: int = 0
+    compute_checked: int = 0
     skipped_too_big: int = 0
     failures: List[str] = dataclasses.field(default_factory=list)
 
@@ -223,6 +224,31 @@ def check_graph(g: Graph, arity: int, rng: random.Random,
                 f"{oracle.cost}")
     else:
         result.skipped_too_big += 1
+
+    # kernel-aware compute term: solve == reprice == oracle must also
+    # hold with the ComputeTerm charged next to the conversion tables
+    # (its penalties are >= 0, so dominance pruning stays sound)
+    from ..core.costterms import ComputeConfig
+    cterm = ComputeConfig(peak_flops=1e12).term_for_axis(50e9, arity)
+    csol = solve_one_cut(g, arity, beam="auto", terms=[cterm])
+    cpriced = graph_cost(g, csol.assignment, arity, mem_scale=1.0,
+                         terms=[cterm])
+    result.compute_checked += 1
+    if not close(cpriced, csol.cost):
+        result.failures.append(
+            f"{g.name}@{arity}: compute-term assignment prices to "
+            f"{cpriced}, solver said {csol.cost}")
+    if csol.cost < sol.cost - 1e-9 * max(1.0, sol.cost):
+        result.failures.append(
+            f"{g.name}@{arity}: adding a >=0 compute term lowered the "
+            f"optimum {sol.cost} -> {csol.cost}")
+    if brute_combo_count(g, arity) <= _MAX_BRUTE_COMBOS:
+        coracle = solve_one_cut_bruteforce(g, arity, workers=0,
+                                           terms=[cterm])
+        if not close(csol.cost, coracle.cost):
+            result.failures.append(
+                f"{g.name}@{arity}: compute-term solver {csol.cost} != "
+                f"oracle {coracle.cost}")
 
     # permutation invariance
     g2 = permuted_clone(g, rng)

@@ -190,3 +190,123 @@ class TestMeshSolve:
         g = mlp_graph(batch=64, hidden=[64, 64])
         sol = solve_mesh(g, [MeshAxis("a", 1)])
         assert sol.total_bytes == 0.0
+
+
+class TestComputeTerm:
+    """Kernel-aware compute cost term (core/costterms.ComputeTerm)."""
+
+    def _cc(self):
+        from repro.core.costterms import ComputeConfig
+        return ComputeConfig(peak_flops=1e12, calibration=1.3)
+
+    def test_alignment_factor(self):
+        from repro.core.costterms import alignment_factor
+        assert alignment_factor(128, 128) == pytest.approx(1.0)
+        assert alignment_factor(256, 128) == pytest.approx(1.0)
+        assert alignment_factor(64, 128) == pytest.approx(2.0)
+        assert alignment_factor(192, 128) == pytest.approx(256 / 192)
+        assert alignment_factor(0, 128) == 1.0
+        # misaligned shards always pay >= 1
+        for n in (1, 3, 7, 100, 129, 1000):
+            assert alignment_factor(n, 8) >= 1.0
+
+    def test_penalties_nonnegative_and_einsum_only(self):
+        g = mlp_graph(batch=64, hidden=[48, 64], with_backward=True)
+        term = self._cc().term_for_axis(50e9, 4)
+        pen = term.penalties(g, 4)
+        assert pen   # einsum outputs got priced
+        outs = {op.output for op in g.ops if op.kind == "einsum"}
+        assert set(pen) <= outs
+        from repro.core.costterms import alignment_factor
+        from repro.core.tiling import Part
+        for t, per in pen.items():
+            assert all(v >= 0.0 for v in per.values())
+            # replication computes everything: an *aligned* partition is
+            # never costlier (a misaligned one may be — tiny shards pad)
+            ts = g.tensors[t]
+            sizes = dict(zip(ts.dims, ts.shape))
+            repl = per[REPLICATE]
+            for c, v in per.items():
+                if not isinstance(c, Part):
+                    continue
+                unit = term.lane if c.dim == ts.dims[-1] else term.sublane
+                if alignment_factor(sizes[c.dim] / 4, unit) == 1.0:
+                    assert v <= repl + 1e-9
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_solve_reprice_oracle(self, seed):
+        g = random_chain_graph(random.Random(seed), 2)
+        term = self._cc().term_for_axis(50e9, 2)
+        sol = solve_one_cut(g, 2, terms=[term])
+        oracle = solve_one_cut_bruteforce(g, 2, workers=0, terms=[term])
+        priced = graph_cost(g, sol.assignment, 2, terms=[term])
+        assert sol.cost == pytest.approx(oracle.cost, rel=1e-9)
+        assert sol.cost == pytest.approx(priced, rel=1e-6)
+        # adding a >= 0 term never lowers the optimum
+        base = solve_one_cut(g, 2)
+        assert sol.cost >= base.cost - 1e-9
+
+    def test_solve_mesh_matches_composed_and_breakdown(self):
+        from repro.core.solver import solution_breakdown
+        g = mlp_graph(batch=32, hidden=[48, 64, 40], with_backward=True)
+        axes = [MeshAxis("x", 4, 50e9), MeshAxis("y", 2, 50e9)]
+        cc = self._cc()
+        sol = solve_mesh(g, axes, compute=cc)
+        comp = composed_cost(g, axes, sol.per_axis, compute=cc)
+        bd = solution_breakdown(g, axes, sol.per_axis, compute=cc)
+        assert sol.total_bytes == pytest.approx(comp, rel=1e-6)
+        assert bd["total"] == pytest.approx(comp, rel=1e-6)
+        assert sum(bd["by_term"].values()) == pytest.approx(bd["total"])
+        assert bd["by_term"]["compute"] > 0
+        assert bd["by_term"]["conversion"] >= 0
+        # default call shape unchanged: conversion-only breakdown
+        bd0 = solution_breakdown(g, axes, sol.per_axis)
+        assert bd0["total"] == pytest.approx(bd0["by_term"]["conversion"])
+
+    def test_solution_compute_seconds(self):
+        from repro.core.costterms import graph_compute_seconds
+        from repro.core.solver import solution_compute_seconds
+        g = mlp_graph(batch=32, hidden=[64, 64])
+        axes = [MeshAxis("x", 4, 50e9)]
+        cc = self._cc()
+        sol = solve_mesh(g, axes, compute=cc)
+        secs = solution_compute_seconds(g, axes, sol.per_axis, cc)
+        assert secs > 0
+        # partitioning along an aligned batch never increases per-device
+        # compute beyond the unsharded whole graph
+        whole = graph_compute_seconds(g, cc)
+        assert secs <= whole + 1e-12
+
+    def test_misaligned_partition_penalized(self):
+        """A 4-way cut of a 4-element dim leaves 1-wide blocks: the
+        alignment factor must make that strictly worse per-shard than
+        the flops/arity ideal."""
+        from repro.core.tiling import Part
+        g = Graph("tiny", allow_uneven=True)
+        g.tensor("x", ("b", "i"), (256, 64), 4.0, kind="input")
+        g.tensor("W", ("i", "o"), (64, 4), 4.0, kind="weight")
+        g.tensor("y", ("b", "o"), (256, 4), 4.0)
+        g.einsum("mm", "x", "W", "y")
+        term = self._cc().term_for_axis(50e9, 4)
+        per = term.penalties(g, 4)["y"]
+        flops = 2.0 * 256 * 64 * 4
+        scale = 1.3 * (50e9 * 4) / 1e12
+        # Part("o"): last dim, 1-wide shards on a 128 lane -> 128x pad
+        assert per[Part("o")] == pytest.approx(
+            flops / 4 * 128.0 * scale)
+        # Part("b"): second-to-last, 64-wide shards aligned to 8 -> ideal
+        assert per[Part("b")] == pytest.approx(flops / 4 * scale)
+        assert per[REPLICATE] == pytest.approx(flops * scale)
+
+    def test_plan_cache_key_distinct(self, tmp_path, monkeypatch):
+        from repro.core.costterms import ComputeConfig
+        from repro.launch import compile as C
+        monkeypatch.setattr(C, "CACHE_DIR", str(tmp_path))
+        a = C.plan_cache_path("arch", "shape", "mesh")
+        cc = ComputeConfig()
+        b = C.plan_cache_path("arch", "shape",
+                              f"mesh_{cc.token()}")
+        cc2 = ComputeConfig(calibration=0.5)
+        c = C.plan_cache_path("arch", "shape",
+                              f"mesh_{cc2.token()}")
+        assert len({a, b, c}) == 3
