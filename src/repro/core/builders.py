@@ -583,9 +583,17 @@ def transformer_graph(cfg: ArchConfig, shape: ShapeConfig,
     return b.g
 
 
-def decode_graph(cfg: ArchConfig, shape: ShapeConfig) -> Graph:
+def decode_graph(cfg: ArchConfig, shape: ShapeConfig,
+                 paged: bool = False, block_len: int = 16) -> Graph:
     """Serving decode step: 1 new token per sequence against a KV cache /
-    SSM state of length shape.seq_len."""
+    SSM state of length shape.seq_len.
+
+    ``paged``: model the paged serving tier — the per-slot block table
+    becomes a solver tensor (role "block_table") feeding the cache
+    append+gather op, so the solve places it with the cache view it
+    indexes (batch-cut together or replicated together), and the
+    flash-decoding seq_kv form is dropped (the table-gather kernel has
+    no partial-softmax combine across seq shards)."""
     B, S, d, V = shape.global_batch, shape.seq_len, cfg.d_model, cfg.vocab
     hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     b = GraphBuilder(f"{cfg.name}:{shape.name}")
@@ -624,9 +632,29 @@ def decode_graph(cfg: ArchConfig, shape: ShapeConfig) -> Graph:
         kc2 = b.act(f"kcache2{tag}", ("batch", "seq_kv", "kv_heads"),
                     (B, Sk, KV * hd), units={"kv_heads": hd},
                     role="kv_cache")
-        b.ewise((kc, kn, vc, vn), kc2, rep,
-                align_dims=("batch", "kv_heads", "seq_kv"),
-                grads=(False,) * 4)
+        if paged:
+            # append+gather through the block table: the table must be
+            # split exactly like the per-slot cache view's batch (each
+            # shard gathers its own rows from the replicated pool), or
+            # replicated with it under head parallelism
+            mbk = -(-Sk // block_len)
+            bt = b.inp(f"btable{tag}", ("batch", "blocks"), (B, mbk),
+                       role="block_table", bytes_per_elem=4.0)
+            forms_g = [
+                ({kc: Part("batch"), kn: Part("batch"),
+                  vc: Part("batch"), vn: Part("batch"),
+                  bt: Part("batch"), kc2: Part("batch")}, 0.0),
+                ({kc: Part("kv_heads"), kn: Part("kv_heads"),
+                  vc: Part("kv_heads"), vn: Part("kv_heads"),
+                  bt: REPLICATE, kc2: Part("kv_heads")}, 0.0),
+                ({kc: REPLICATE, kn: REPLICATE, vc: REPLICATE,
+                  vn: REPLICATE, bt: REPLICATE, kc2: REPLICATE}, 0.0),
+            ]
+            b.custom((kc, kn, vc, vn, bt), kc2, forms_g, rep)
+        else:
+            b.ewise((kc, kn, vc, vn), kc2, rep,
+                    align_dims=("batch", "kv_heads", "seq_kv"),
+                    grads=(False,) * 4)
         ao = b.act(f"ao{tag}", ("batch", "heads"), (B, H * hd),
                    units={"heads": hd})
         forms = [
@@ -639,6 +667,11 @@ def decode_graph(cfg: ArchConfig, shape: ShapeConfig) -> Graph:
             ({q: Part("heads"), kc2: Part("kv_heads"), ao: Part("heads")},
              0.0),
         ]
+        if paged:
+            # no flash-decoding form: the paged gather kernel cannot
+            # combine partial softmaxes across seq_kv shards
+            forms = [f for f in forms
+                     if f[0][kc2] != Part("seq_kv")]
         b.custom((q, kc2), ao, forms, rep)
         xo = b.act(f"xattn{tag}", ("batch", "d_model"), (B, d), role="x")
         b.einsum(ao, wo, xo, rep, grads=(False, False))
@@ -723,5 +756,7 @@ def build_graph(cfg: ArchConfig, shape: ShapeConfig,
                 error_feedback: bool = False) -> Graph:
     if shape.kind == "decode":
         return decode_graph(cfg, shape)
+    if shape.kind == "decode-paged":
+        return decode_graph(cfg, shape, paged=True)
     return transformer_graph(cfg, shape, master_fp32=master_fp32,
                              error_feedback=error_feedback)

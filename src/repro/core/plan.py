@@ -19,7 +19,7 @@ from .tiling import Part, REPLICATE
 # roles carried by the decode-time cache/state pytree (models/sharding.py
 # CACHE_RULES maps the cache leaves onto them); the serving engine shards
 # the pool cache through these
-CACHE_ROLES = ("kv_cache", "ssm_state")
+CACHE_ROLES = ("kv_cache", "ssm_state", "block_table")
 
 
 @dataclasses.dataclass
@@ -156,6 +156,9 @@ def manual_megatron_plan(mesh_axis_names: Sequence[str],
         "ssm_out":  cuts(**{model_axis: "inner"}),
         "kv_cache": cuts(**da, **{model_axis: "heads"}),
         "ssm_state": cuts(**da, **{model_axis: "inner"}),
+        # paged serving: the block table rides the same batch cut as the
+        # cache rows it indexes (the pool itself has no batch axis)
+        "block_table": cuts(**da),
         "norm":     cuts(),
     }
     return ShardingPlan(tuple(mesh_axis_names), role_cuts)

@@ -288,6 +288,105 @@ def flash_attention_decode(q, k_cache, v_cache, lengths, *, window=None,
 
 
 # ---------------------------------------------------------------------------
+# paged decode (block-pool KV cache gathered through a block table)
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale, block_len):
+    # tbl_ref / len_ref are scalar-prefetch refs: the BlockSpec index_map
+    # already used tbl_ref to route this grid step's (k_ref, v_ref) at
+    # the right pool block, so the body only needs the slot's length.
+    bb = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[bb]
+    k_pos = ki * block_len + jax.lax.broadcasted_iota(
+        jnp.int32, (block_len,), 0)
+    # positions >= length are dead: stale data from retired requests'
+    # recycled blocks, or the reserved null block behind an unallocated
+    # table entry — NEG_INF'd exactly like the linear decode kernel
+    valid = k_pos < length
+
+    q = q_ref[...].astype(jnp.float32) * scale            # [g, hd]
+    k = _clean(k_ref[...].astype(jnp.float32), valid)     # [bl, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [g, bl]
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + p.sum(-1)
+    v = _clean(v_ref[...].astype(jnp.float32), valid)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot(p.astype(v.dtype), v))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_paged_decode(q, k_pool, v_pool, table, lengths, *,
+                                 scale=None, interpret=False):
+    """One decode step against a paged KV pool: q [B, H, hd], pools
+    [NB, BL, KV, hd], per-slot block ``table`` [B, MB] and valid
+    ``lengths`` [B].  The table rides scalar prefetch so the BlockSpec
+    index_map can route each (slot, logical-block) grid step straight at
+    its pool block — the gather never materializes in HBM.  Unowned
+    table entries point at the allocator's reserved null block; the
+    length mask keeps whatever lives there out of the softmax."""
+    b, h, hd = q.shape
+    nb, bl, kv, _ = k_pool.shape
+    mb = table.shape[1]
+    _check_gqa(h, kv)
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, kv, g, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, mb),
+        in_specs=[
+            pl.BlockSpec((None, None, g, hd),
+                         lambda bb, kvi, ki, tbl, L: (bb, kvi, 0, 0)),
+            pl.BlockSpec((None, bl, None, hd),
+                         lambda bb, kvi, ki, tbl, L:
+                         (tbl[bb, ki], 0, kvi, 0)),
+            pl.BlockSpec((None, bl, None, hd),
+                         lambda bb, kvi, ki, tbl, L:
+                         (tbl[bb, ki], 0, kvi, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, hd),
+                               lambda bb, kvi, ki, tbl, L:
+                               (bb, kvi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale,
+                          block_len=bl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(table, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      qg, k_pool, v_pool)
+    return o.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
 # backward
 # ---------------------------------------------------------------------------
 

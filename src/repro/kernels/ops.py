@@ -88,6 +88,15 @@ def flash_attention_decode(q, k_cache, v_cache, lengths, *,
                                      interpret=_default_interpret())
 
 
+def flash_attention_paged_decode(q, k_pool, v_pool, table, lengths, *,
+                                 scale: Optional[float] = None):
+    """One decode step against the paged block-pool KV cache, gathering
+    blocks through the scalar-prefetched ``table``.  Forward-only."""
+    return fa.flash_attention_paged_decode(q, k_pool, v_pool, table,
+                                           lengths, scale=scale,
+                                           interpret=_default_interpret())
+
+
 def ssd_chunk_scan(xh, a_log, bb, cc, chunk: int = 128):
     return ssd_mod.ssd_chunk_scan(xh, a_log, bb, cc, chunk=chunk,
                                   interpret=_default_interpret())

@@ -10,6 +10,9 @@ throughput plus per-token latency percentiles.
   # open-loop Poisson arrivals at 2 req/s:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --requests 12 --arrivals poisson --rate 2.0
+  # paged KV pool at half the linear memory + speculative decoding:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --slots 8 --requests 32 --paged --n-blocks 33 --spec-k 4
 
 Only stdlib at module level: --mesh forces the host device count via
 XLA_FLAGS, which must be set before jax initializes.
@@ -38,6 +41,20 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="prefill chunk size")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV block pool + block-table cache")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="tokens per KV block (must divide --max-len)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="pool size in blocks (default: slots * "
+                         "max_len/block_len + 1 — linear-equivalent); "
+                         "smaller values serve memory-bound via "
+                         "preemption")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix shared-prefix block reuse")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="self-speculative draft length per dispatch "
+                         "(1 = plain decode)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="e.g. 4x2 — forces host devices and builds a "
                          "(data, model) mesh")
@@ -94,7 +111,10 @@ def run_workload(srv, arrivals, gen):
         ta = time.monotonic()
         admit_evs = srv.admit_waiting()
         tb = time.monotonic()
-        dec_evs = srv.decode_once()
+        if srv.scfg.spec_k > 1:
+            dec_evs = srv.spec_once()
+        else:
+            dec_evs = srv.decode_once()
         tc = time.monotonic()
         if admit_evs:
             prefill_s += tb - ta
@@ -138,6 +158,10 @@ def run_workload(srv, arrivals, gen):
         "ttft_p95_s": _percentile(ttfts, 0.95),
         "itl_p50_s": _percentile(itls, 0.50),
         "itl_p95_s": _percentile(itls, 0.95),
+        # raw samples, for pooling percentiles across repeated runs
+        # (callers serializing this dict should drop them)
+        "itl_s": itls,
+        "ttft_s": ttfts,
     }
 
 
@@ -198,7 +222,10 @@ def main(argv=None) -> int:
     scfg = ServeConfig(slots=args.slots, max_len=args.max_len,
                        prefill_chunk=args.chunk,
                        temperature=args.temperature, top_k=args.top_k,
-                       seed=args.seed)
+                       seed=args.seed, paged=args.paged,
+                       block_len=args.block_len, n_blocks=args.n_blocks,
+                       prefix_cache=not args.no_prefix_cache,
+                       spec_k=args.spec_k)
     srv = Server(model, params, scfg, mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
@@ -227,7 +254,19 @@ def main(argv=None) -> int:
         "arrivals": args.arrivals,
         "rate": args.rate if args.arrivals == "poisson" else None,
         "n_devices": jax.device_count(),
+        "paged": args.paged, "spec_k": args.spec_k,
     }
+    if args.paged:
+        rec["meta"]["block_len"] = args.block_len
+        rec["meta"]["n_blocks"] = srv.n_blocks
+        rec["meta"]["prefix_cache"] = not args.no_prefix_cache
+        rec["paged"] = {
+            "prefill_dispatches": srv.prefill_dispatches,
+            "decode_dispatches": srv.decode_dispatches,
+            "verify_dispatches": srv.verify_dispatches,
+            "preemptions": srv.preemptions,
+            "prompt_cache_hits": srv.prompt_cache_hits,
+        }
 
     def fmt(v, unit=""):
         return "n/a" if v is None else f"{v:,.1f}{unit}"
@@ -248,8 +287,10 @@ def main(argv=None) -> int:
           f"{fmt(rec['ttft_p50_s'] and rec['ttft_p50_s'] * 1e3, ' ms')}")
 
     if args.json_out:
+        slim = {k: v for k, v in rec.items()
+                if k not in ("itl_s", "ttft_s")}
         with open(args.json_out, "w") as f:
-            json.dump(rec, f, indent=1)
+            json.dump(slim, f, indent=1)
         print(f"metrics -> {args.json_out}")
 
     if args.min_decode_tput is not None:

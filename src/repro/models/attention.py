@@ -167,6 +167,73 @@ def attend_cache(q, k_cache, v_cache, length, *,
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
+def attend_paged_pallas(q, k_pool, v_pool, table, length, *,
+                        scale: Optional[float] = None,
+                        mesh=None, plan=None):
+    """Pallas paged-decode kernel path: the kernel gathers KV blocks
+    through the scalar-prefetched block table (no materialized per-slot
+    view).  With a mesh + plan the kernel runs under shard_map with the
+    plan's block_table batch cut (pool replicated per data shard) and
+    the kv_cache kv_heads cut; any cut the kernel cannot honor (blocks /
+    block_len / hd on the pool, blocks on the table, non-dividing
+    degrees) falls back to the XLA gather path."""
+    from ..kernels import ops as kops
+
+    if mesh is None or plan is None:
+        return kops.flash_attention_paged_decode(q, k_pool, v_pool,
+                                                 table, length,
+                                                 scale=scale)
+
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, h, hd = q.shape
+    kv = k_pool.shape[2]
+    nbs, bls, hs, ds = _spec_entries(
+        plan.pspec("kv_cache", ("blocks", "block_len", "kv_heads", "hd")),
+        4)
+    bs, tbs = _spec_entries(
+        plan.pspec("block_table", ("batch", "blocks")), 2)
+    ok = (nbs is None and bls is None and ds is None and tbs is None
+          and (bs is None or b % _axes_degree(mesh, bs) == 0
+               and length.shape[0] % _axes_degree(mesh, bs) == 0)
+          and (hs is None or kv % _axes_degree(mesh, hs) == 0
+               and h % _axes_degree(mesh, hs) == 0))
+    if not ok:
+        return attend_paged(q, k_pool, v_pool, table, length, scale=scale)
+    fn = shard_map(
+        partial(kops.flash_attention_paged_decode, scale=scale),
+        mesh=mesh,
+        in_specs=(P(bs, hs, None), P(None, None, hs, None),
+                  P(None, None, hs, None), P(bs, None), P(bs)),
+        out_specs=P(bs, hs, None),
+        check_rep=False)
+    return fn(q, k_pool, v_pool, table, length)
+
+
+def attend_paged(q, k_pool, v_pool, table, length, *,
+                 scale: Optional[float] = None,
+                 impl: str = "xla", mesh=None, plan=None):
+    """Paged decode attention: q [B, H, hd] against block pools
+    [NB, BL, KV, hd] through a per-slot block ``table`` [B, MB];
+    ``length`` [B] = valid cache entries.  The XLA path materializes the
+    per-slot view by gathering table rows (positions >= length mask to
+    NEG_INF and underflow to exactly 0 after softmax, so garbage in
+    unowned/stale blocks cannot leak — bit-equal to a linear cache of
+    the same MB*BL length).  impl="pallas" gathers inside the kernel
+    via scalar-prefetched block indices instead."""
+    if impl == "pallas":
+        return attend_paged_pallas(q, k_pool, v_pool, table, length,
+                                   scale=scale, mesh=mesh, plan=plan)
+    b, mb = table.shape
+    nb, bl, kv, hd = k_pool.shape
+    kc = k_pool[table].reshape(b, mb * bl, kv, hd)
+    vc = v_pool[table].reshape(b, mb * bl, kv, hd)
+    return attend_cache(q, kc, vc, length, window=None, scale=scale)
+
+
 def attention(q, k, v, *, impl: str = "xla", **kw):
     if impl == "pallas":
         from ..kernels import ops as kops

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from . import attention as attention_mod
-from .attention import attend_cache, attention, flash_attention_xla
+from .attention import (attend_cache, attend_paged, attention,
+                        flash_attention_xla)
 from .common import (dense_init, embed_init, rms_norm, rope, shard,
                      softmax_cross_entropy)
 from .mamba import (init_mamba, init_mamba_state, mamba_forward, mamba_step)
@@ -39,7 +40,11 @@ PyTree = Any
 def _cache_batch_axis(path) -> int:
     last = path[-1]
     key = getattr(last, "key", getattr(last, "idx", last))
-    return 0 if str(key) == "pos" else 1
+    # rank-1 "pos" and the paged block table are indexed [slot, ...];
+    # every other leaf stacks layers first with batch at axis 1.  The
+    # paged block *pool* has no batch axis at all — slot_slice/slot_merge
+    # are meaningless there (reset_slot short-circuits for paged caches).
+    return 0 if str(key) in ("pos", "block_table") else 1
 
 
 def slot_slice(cache: PyTree, slot) -> PyTree:
@@ -65,6 +70,14 @@ def prefill_parallel_ok(cfg: ArchConfig) -> bool:
     return (not (cfg.family == "hybrid" and cfg.attn_every)
             and cfg.xlstm is None and cfg.family != "ssm"
             and cfg.swa_window is None)
+
+
+def paged_ok(cfg: ArchConfig) -> bool:
+    """Whether the paged block-pool KV layout applies: the dense
+    full-attention decode branch (same precondition as parallel prefill —
+    recurrent state has no sequence axis to page, and a ring-buffer SWA
+    cache is already O(window))."""
+    return prefill_parallel_ok(cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -374,8 +387,41 @@ class LM:
                               if cfg.swa_window else max_len)
         return cache
 
-    def _attn_decode(self, p, x, kv_cache, pos, cfg, win):
-        """x: [B, D]; kv_cache: {"k","v"} [B, S, KV, hd] for ONE layer."""
+    def init_cache_paged(self, batch: int, max_len: int, n_blocks: int,
+                         block_len: int) -> PyTree:
+        """Paged serving cache: one block *pool* per layer — no per-slot
+        max_len reservation — plus a per-slot block table mapping logical
+        block index -> pool block id.  Block 0 is the host allocator's
+        reserved null sink (zeroed table rows point at it).  Dense
+        full-attention families only (``paged_ok``)."""
+        cfg = self.cfg
+        if not paged_ok(cfg):
+            raise ValueError(
+                f"paged KV cache unsupported for {cfg.name} (recurrent "
+                "state or ring-buffer SWA cache)")
+        if max_len % block_len:
+            raise ValueError(
+                f"block_len={block_len} must divide max_len={max_len} "
+                "(keeps the gathered per-slot view the same length as "
+                "the linear cache — the bit-equality invariant)")
+        hd, kv, L = cfg.hd, cfg.n_kv_heads, cfg.n_layers
+        mb = max_len // block_len
+        return {
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "block_table": jnp.zeros((batch, mb), jnp.int32),
+            "pages": {
+                "k": jnp.zeros((L, n_blocks, block_len, kv, hd),
+                               jnp.bfloat16),
+                "v": jnp.zeros((L, n_blocks, block_len, kv, hd),
+                               jnp.bfloat16),
+            },
+        }
+
+    def _attn_decode(self, p, x, kv_cache, pos, cfg, win, active=None):
+        """x: [B, D]; kv_cache: {"k","v"} [B, S, KV, hd] for ONE layer.
+        ``active`` [B] bool (optional): rows marked inactive drop their
+        K/V write (index pushed out of range, scatter mode="drop") so an
+        idle slot's cache row cannot be disturbed between requests."""
         b, d = x.shape
         hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
         q = x @ p["wq"]
@@ -388,10 +434,13 @@ class LM:
         k = rope(k.reshape(b, 1, kvh, hd), pos[:, None],
                  cfg.rope_theta)[:, 0]
         v = v.reshape(b, kvh, hd)
-        slot = pos % kv_cache["k"].shape[1] if win else pos
-        kc = jax.vmap(lambda c, i, val: c.at[i].set(val))(
+        S = kv_cache["k"].shape[1]
+        slot = pos % S if win else pos
+        if active is not None:
+            slot = jnp.where(active, slot, S)      # OOB -> dropped
+        kc = jax.vmap(lambda c, i, val: c.at[i].set(val, mode="drop"))(
             kv_cache["k"], slot, k.astype(jnp.bfloat16))
-        vc = jax.vmap(lambda c, i, val: c.at[i].set(val))(
+        vc = jax.vmap(lambda c, i, val: c.at[i].set(val, mode="drop"))(
             kv_cache["v"], slot, v.astype(jnp.bfloat16))
         length = jnp.minimum(pos + 1, kc.shape[1])
         o = attend_cache(q, kc, vc, length, window=None,
@@ -400,10 +449,63 @@ class LM:
         return (o.reshape(b, h * hd) @ p["wo"],
                 {"k": kc, "v": vc})
 
-    def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray,
-                                                          PyTree]:
+    def _attn_decode_paged(self, p, x, pool, table, pos, cfg,
+                           active=None):
+        """x: [B, D]; pool: {"k","v"} [NB, BL, KV, hd] for ONE layer;
+        table: [B, MB] pool block ids.  The new K/V scatters through the
+        slot's block table (rows past their table or marked inactive are
+        dropped), then attention runs against the table-gathered view —
+        masked positions beyond ``pos`` hold garbage from other requests'
+        retired blocks, but the NEG_INF mask underflows their softmax
+        weight to exactly 0.0, so the result is bit-equal to the linear
+        cache (see attend_cache / DESIGN.md §15)."""
+        b, d = x.shape
+        hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        bl = pool["k"].shape[1]
+        mb = table.shape[1]
+        q = x @ p["wq"]
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = rope(q.reshape(b, 1, h, hd), pos[:, None],
+                 cfg.rope_theta)[:, 0]
+        k = rope(k.reshape(b, 1, kvh, hd), pos[:, None],
+                 cfg.rope_theta)[:, 0]
+        v = v.reshape(b, kvh, hd)
+        nb = pool["k"].shape[0]
+        bidx = pos // bl
+        blk = jnp.take_along_axis(
+            table, jnp.minimum(bidx, mb - 1)[:, None], axis=1)[:, 0]
+        ok = bidx < mb
+        if active is not None:
+            ok &= active
+        # positive-OOB sentinel: jnp wraps NEGATIVE indices (NumPy
+        # semantics) before the mode="drop" bounds check, so -1 would
+        # scatter into live block NB-1 instead of being dropped
+        wblk = jnp.where(ok, blk, nb)              # OOB -> dropped
+        kc = pool["k"].at[wblk, pos % bl].set(k.astype(jnp.bfloat16),
+                                              mode="drop")
+        vc = pool["v"].at[wblk, pos % bl].set(v.astype(jnp.bfloat16),
+                                              mode="drop")
+        length = jnp.minimum(pos + 1, mb * bl)
+        o = attend_paged(q, kc, vc, table, length,
+                         impl=self.attn_impl, mesh=self.mesh,
+                         plan=self.plan)
+        return (o.reshape(b, h * hd) @ p["wo"],
+                {"k": kc, "v": vc})
+
+    def decode_step(self, params, cache, tokens,
+                    active=None) -> Tuple[jnp.ndarray, PyTree]:
         """tokens: [B] int32 (or [B, D] embeds for stub frontends).
-        Returns (logits [B, V], new cache)."""
+        Returns (logits [B, V], new cache).
+
+        ``active`` [B] bool (optional): inactive rows freeze — their
+        cache position does not advance and their attention K/V write is
+        dropped, so a long-idle free slot cannot drift past max_len
+        between requests (the pool always dispatches full-width).
+        Recurrent per-row state still churns for inactive rows; it is
+        zeroed by reset_slot at the next admission."""
         cfg = self.cfg
         pos = cache["pos"]
         if tokens.ndim == 2:
@@ -437,7 +539,7 @@ class LM:
                 ps = params["shared"]
                 h, kv_new = self._attn_decode(
                     ps["attn"], rms_norm(x, ps["ln1"], cfg.norm_eps),
-                    kvi, pos, cfg, win=True)
+                    kvi, pos, cfg, win=True, active=active)
                 x = x + h
                 x = x + _mlp_forward(ps["mlp"],
                                      rms_norm(x, ps["ln2"], cfg.norm_eps))
@@ -475,12 +577,33 @@ class LM:
             x, st_new = self._fold(body, x,
                                    (params["mamba"], cache["mamba"]))
             new_cache["mamba"] = st_new
+        elif "pages" in cache:
+            table = cache["block_table"]
+
+            def body(x, inp):
+                p, pool = inp
+                h, pool_new = self._attn_decode_paged(
+                    p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                    pool, table, pos, cfg, active=active)
+                x = x + h
+                xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+                if cfg.moe is not None:
+                    y, _ = moe_ffn(p["moe"], xn[:, None, :], cfg, self.plan)
+                    y = y[:, 0]
+                else:
+                    y = _mlp_forward(p["mlp"], xn)
+                return x + y, pool_new
+
+            x, pool_new = self._fold(body, x,
+                                     (params["layers"], cache["pages"]))
+            new_cache["pages"] = pool_new
         else:
             def body(x, inp):
                 p, kvi = inp
                 h, kv_new = self._attn_decode(
                     p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
-                    kvi, pos, cfg, win=cfg.swa_window is not None)
+                    kvi, pos, cfg, win=cfg.swa_window is not None,
+                    active=active)
                 x = x + h
                 xn = rms_norm(x, p["ln2"], cfg.norm_eps)
                 if cfg.moe is not None:
@@ -495,14 +618,25 @@ class LM:
             new_cache["kv"] = kv_new
 
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
-        new_cache["pos"] = pos + 1
+        if active is None:
+            new_cache["pos"] = pos + 1
+        else:
+            new_cache["pos"] = pos + active.astype(pos.dtype)
         return self._head(params, x), new_cache
 
     # -- serving: per-slot reset + chunked prefill -------------------------
     def reset_slot(self, cache, slot) -> PyTree:
         """Zero one slot's cache row (KV / recurrent state / pos).
         Admission into a freed slot must never see the previous
-        request's state (stale-cache leakage)."""
+        request's state (stale-cache leakage).  For a paged cache only
+        the slot's pos and block-table row are cleared — the pool blocks
+        themselves are recycled by the host allocator, and a zeroed
+        table row points at the reserved null block."""
+        if "pages" in cache:
+            new = dict(cache)
+            new["pos"] = cache["pos"].at[slot].set(0)
+            new["block_table"] = cache["block_table"].at[slot].set(0)
+            return new
         sub = jax.tree_util.tree_map(jnp.zeros_like,
                                      slot_slice(cache, slot))
         return slot_merge(cache, sub, slot)
@@ -527,6 +661,14 @@ class LM:
         re-associates the softmax under bf16); "parallel" forces the
         offset-attention path (full-attention linear caches only)."""
         cfg = self.cfg
+        if "pages" in cache:
+            # paged pool: no slot_slice (the pool has no batch axis) —
+            # writes route through the slot's block-table row instead
+            if impl == "scan":
+                return self._prefill_chunk_paged_scan(
+                    params, cache, tokens, slot, n_valid)
+            return self._prefill_chunk_attn_paged(params, cache, tokens,
+                                                  slot, n_valid)
         sub = slot_slice(cache, slot)
         parallel_ok = prefill_parallel_ok(cfg)
         if impl == "parallel" and not parallel_ok:
@@ -624,3 +766,161 @@ class LM:
         new_sub["kv"] = kv_new
         new_sub["pos"] = sub["pos"] + n_valid
         return last.astype(jnp.float32), new_sub
+
+    # -- paged serving: block-pool prefill / rescore -----------------------
+    def _attn_prefill_paged(self, p, x, pool, row_table, positions,
+                            n_valid, cfg):
+        """x: [1, C, D]; pool: {"k","v"} [NB, BL, KV, hd] (one layer);
+        row_table: [MB] the slot's block-table row.  The chunk's K/V
+        scatters through the table at absolute ``positions`` (padded
+        rows masked out — unlike the linear path they would land in real
+        pool blocks), then offset flash attention runs against the
+        table-gathered per-slot view."""
+        b, c, d = x.shape
+        hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        bl = pool["k"].shape[1]
+        mb = row_table.shape[0]
+        q = x @ p["wq"]
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = rope(q.reshape(b, c, h, hd), positions, cfg.rope_theta)
+        k = rope(k.reshape(b, c, kvh, hd), positions, cfg.rope_theta)
+        v = v.reshape(b, c, kvh, hd)
+        nb = pool["k"].shape[0]
+        abs_pos = positions[0]                     # [C]
+        bidx = abs_pos // bl
+        blk = row_table[jnp.minimum(bidx, mb - 1)]
+        # positive-OOB sentinel, not -1: negative indices wrap before
+        # the mode="drop" bounds check and would hit live block NB-1
+        wblk = jnp.where((jnp.arange(c) < n_valid) & (bidx < mb),
+                         blk, nb)                  # OOB -> dropped
+        kc = pool["k"].at[wblk, abs_pos % bl].set(
+            k[0].astype(jnp.bfloat16), mode="drop")
+        vc = pool["v"].at[wblk, abs_pos % bl].set(
+            v[0].astype(jnp.bfloat16), mode="drop")
+        kview = kc[row_table].reshape(1, mb * bl, kvh, hd)
+        vview = vc[row_table].reshape(1, mb * bl, kvh, hd)
+        # same GSPMD caveat as the linear path: no pallas partitioning
+        # rule under a mesh
+        impl = self.attn_impl if self.mesh is None else "xla"
+        o = attention(q, kview, vview, causal=True,
+                      q_offset=positions[0, 0], impl=impl)
+        return o.reshape(b, c, h * hd) @ p["wo"], {"k": kc, "v": vc}
+
+    def _prefill_chunk_attn_paged(self, params, cache, tokens, slot,
+                                  n_valid):
+        """Parallel chunk prefill through the paged pool (whole cache in,
+        whole cache out — only ``slot``'s table row and pos change)."""
+        cfg = self.cfg
+        table = cache["block_table"]
+        pos0 = cache["pos"][slot]
+        c = tokens.shape[0]
+        x = params["embed"][tokens][None]          # [1, C, D]
+        x = shard(x, self.plan, "x", ("batch", "seq", "d_model"))
+        positions = (pos0 + jnp.arange(c))[None, :]
+        row_table = jax.lax.dynamic_index_in_dim(table, slot, 0,
+                                                 keepdims=False)
+
+        def body(x, inp):
+            p, pool = inp
+            h, pool_new = self._attn_prefill_paged(
+                p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), pool,
+                row_table, positions, n_valid, cfg)
+            x = x + h
+            xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                y, _ = moe_ffn(p["moe"], xn, cfg, self.plan)
+            else:
+                y = _mlp_forward(p["mlp"], xn)
+            return x + y, pool_new
+
+        x, pool_new = self._fold(body, x, (params["layers"],
+                                           cache["pages"]))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = self._head(params, x)[0]          # [C, V]
+        last = jax.lax.dynamic_index_in_dim(logits, n_valid - 1, 0,
+                                            keepdims=False)
+        new_cache = dict(cache)
+        new_cache["pages"] = pool_new
+        new_cache["pos"] = cache["pos"].at[slot].add(n_valid)
+        return last.astype(jnp.float32), new_cache
+
+    def _prefill_chunk_paged_scan(self, params, cache, tokens, slot,
+                                  n_valid):
+        """Sequential reference prefill for the paged pool: scan the
+        pool-wide decode step with a one-hot active mask (only ``slot``
+        advances; every other row is frozen by the mask) — bit-identical
+        to feeding the prompt through decode_step token by token."""
+        cfg = self.cfg
+        b = cache["pos"].shape[0]
+        onehot = jnp.arange(b) == slot
+
+        def body(carry, inp):
+            cache, lg = carry
+            tok, i = inp
+            feed = jnp.where(onehot, tok, 0).astype(jnp.int32)
+            act = onehot & (i < n_valid)
+            lg2, cache2 = self.decode_step(params, cache, feed,
+                                           active=act)
+            row = jax.lax.dynamic_index_in_dim(lg2, slot, 0,
+                                               keepdims=False)
+            lg = jnp.where(i == n_valid - 1, row.astype(jnp.float32), lg)
+            return (cache2, lg), None
+
+        lg0 = jnp.zeros((cfg.vocab,), jnp.float32)
+        (cache, logits), _ = jax.lax.scan(
+            body, (cache, lg0), (tokens, jnp.arange(tokens.shape[0])))
+        return logits, cache
+
+    def decode_rescore(self, params, cache, tokens, rows, positions):
+        """Read-only batched re-score for speculative verification:
+        logits for feeding ``tokens`` [N] at cache ``positions`` [N] of
+        pool rows ``rows`` [N].  The cache (linear or paged, dense
+        families only) already holds the drafted K/V — including each
+        token's own position, written by the draft pass — so no cache
+        write happens here and the attended state per (row, position)
+        matches what the sequential decode step saw."""
+        cfg = self.cfg
+        paged = "pages" in cache
+        table = cache.get("block_table")
+        n = tokens.shape[0]
+        hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        x = params["embed"][tokens]                # [N, D]
+
+        def attn(p, xn, kvi):
+            q = xn @ p["wq"]
+            if cfg.qkv_bias:
+                q = q + p["bq"]
+            q = rope(q.reshape(n, 1, h, hd), positions[:, None],
+                     cfg.rope_theta)[:, 0]
+            if paged:
+                mb = table.shape[1]
+                bl = kvi["k"].shape[1]
+                kc = kvi["k"][table[rows]].reshape(n, mb * bl, kvh, hd)
+                vc = kvi["v"][table[rows]].reshape(n, mb * bl, kvh, hd)
+            else:
+                kc = kvi["k"][rows]
+                vc = kvi["v"][rows]
+            o = attend_cache(q, kc, vc, positions + 1, window=None,
+                             impl="xla")
+            return o.reshape(n, h * hd) @ p["wo"]
+
+        def body(x, inp):
+            p, kvi = inp
+            x = x + attn(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                         kvi)
+            xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                y, _ = moe_ffn(p["moe"], xn[:, None, :], cfg, self.plan)
+                y = y[:, 0]
+            else:
+                y = _mlp_forward(p["mlp"], xn)
+            return x + y, None
+
+        x, _ = self._fold(body, x, (params["layers"],
+                                    cache["pages"] if paged
+                                    else cache["kv"]))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return self._head(params, x)

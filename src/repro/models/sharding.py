@@ -44,6 +44,16 @@ RULES = [
 
 # cache / batch tensors
 CACHE_RULES = [
+    # paged serving tier: the block *pool* has no batch/seq axis (its
+    # "blocks"/"block_len" dims deliberately don't alias "seq_kv", so a
+    # solved flash-decoding seq_kv cut can't split a softmax block), and
+    # the block table carries the batch cut of the cache it indexes.
+    # These must precede the generic (^|/)k$ rule below.
+    (r"pages/k$", "kv_cache",
+     ("layer", "blocks", "block_len", "kv_heads", "hd")),
+    (r"pages/v$", "kv_cache",
+     ("layer", "blocks", "block_len", "kv_heads", "hd")),
+    (r"block_table$", "block_table", ("batch", "blocks")),
     (r"kv?/k$|shared/k$|(^|/)k$", "kv_cache",
      ("layer", "batch", "seq_kv", "kv_heads", "hd")),
     (r"kv?/v$|shared/v$|(^|/)v$", "kv_cache",

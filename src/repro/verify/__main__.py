@@ -56,6 +56,8 @@ def main(argv=None) -> int:
         for c in CELLS:
             print(f"{c.name:16s} {c.arch:22s} {c.family:12s} {c.kind}")
         print(f"{'serve':16s} {'(engine cell)':22s} {'dense':12s} serve")
+        print(f"{'serve-paged':16s} {'(engine cell)':22s} "
+              f"{'2 dense families':12s} serve")
         print(f"{'trace':16s} {'(frontend cell)':22s} {'3 families':12s}"
               f" trace")
         print(f"{'train-engine':16s} {'(engine cell)':22s} {'dense':12s}"
@@ -96,6 +98,8 @@ def main(argv=None) -> int:
         # skips it too
         with_serve = (names is None or "serve" in names) \
             and not args.no_numerics
+        with_serve_paged = (names is None or "serve-paged" in names) \
+            and not args.no_numerics
         with_trace = names is None or "trace" in names
         with_train = names is None or "train-engine" in names
         with_pipeline = names is None or "pipeline" in names
@@ -104,8 +108,9 @@ def main(argv=None) -> int:
             specs = get_cells(None)
         else:
             names = [n for n in names
-                     if n not in ("serve", "trace", "train-engine",
-                                  "pipeline", "compute")]
+                     if n not in ("serve", "serve-paged", "trace",
+                                  "train-engine", "pipeline",
+                                  "compute")]
             specs = get_cells(names) if names else []
         mesh = make_compat_mesh(MESH_SHAPE, MESH_AXES)
         recs = run_cells(specs, mesh, numerics=not args.no_numerics,
@@ -126,6 +131,21 @@ def main(argv=None) -> int:
                       f"({time.time() - t0:.0f}s)", flush=True)
                 if srec["status"] == "error":
                     print(srec["traceback"], flush=True)
+        if with_serve_paged:
+            from .serve_paged_cell import run_serve_paged_cell
+            t0 = time.time()
+            sprec = run_serve_paged_cell(mesh)
+            report["serve_paged"] = sprec
+            ok &= sprec["status"] == "ok"
+            if not args.json:
+                bits = " ".join(
+                    f"{l['arch']}:bit={int(l.get('bit_equal', False))}"
+                    f"/err={l.get('sharded_decode_max_abs_err')}"
+                    for l in sprec.get("legs", []))
+                print(f"[{sprec['status']}] {'serve-paged':16s} {bits} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+                if sprec["status"] == "error":
+                    print(sprec["traceback"], flush=True)
         if with_train:
             from .train_cell import run_train_cell
             t0 = time.time()

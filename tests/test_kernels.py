@@ -255,6 +255,67 @@ class TestDecodeKernel:
                                    atol=2e-5, rtol=2e-5)
 
 
+class TestPagedDecodeKernel:
+    """Scalar-prefetched paged decode kernel vs the XLA gather path
+    (pool blocks materialized through the table, then attend_cache)."""
+
+    @pytest.mark.parametrize("h,kv,bl,mb", [
+        (4, 2, 16, 4), (4, 4, 8, 6), (2, 1, 32, 2),
+    ])
+    def test_matches_xla_gather(self, h, kv, bl, mb):
+        from repro.models.attention import attend_paged
+        b, hd = 4, 32
+        nb = mb * b + 1
+        key = jax.random.PRNGKey(21)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        q = jax.random.normal(k1, (b, h, hd))
+        k_pool = jax.random.normal(k2, (nb, bl, kv, hd))
+        v_pool = jax.random.normal(k3, (nb, bl, kv, hd))
+        # each slot owns a random disjoint slice of the pool (block 0
+        # is the reserved null sink for unowned table tail entries)
+        perm = np.asarray(jax.random.permutation(k4, nb - 1)) + 1
+        table = np.zeros((b, mb), np.int32)
+        lengths = np.asarray([1, bl, bl + 3, mb * bl], np.int32)[:b]
+        for s in range(b):
+            n_owned = int(-(-int(lengths[s]) // bl))
+            table[s, :n_owned] = perm[s * mb:s * mb + n_owned]
+        o_x = attend_paged(q, k_pool, v_pool, jnp.asarray(table),
+                           jnp.asarray(lengths), impl="xla")
+        o_p = ops.flash_attention_paged_decode(q, k_pool, v_pool,
+                                               jnp.asarray(table),
+                                               jnp.asarray(lengths))
+        np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_x),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_null_block_garbage_cannot_leak(self):
+        """Entries past ``length`` route to block 0; poisoning it (and
+        every unowned block) with huge values must not move the
+        output."""
+        from repro.models.attention import attend_paged
+        b, h, kv, hd, bl, mb, nb = 2, 4, 2, 32, 8, 4, 9
+        key = jax.random.PRNGKey(22)
+        q = jax.random.normal(key, (b, h, hd))
+        k_pool = jax.random.normal(key, (nb, bl, kv, hd))
+        v_pool = jax.random.normal(key, (nb, bl, kv, hd))
+        table = jnp.asarray([[1, 2, 0, 0], [3, 0, 0, 0]], jnp.int32)
+        lengths = jnp.asarray([11, 8], jnp.int32)
+        clean = ops.flash_attention_paged_decode(q, k_pool, v_pool,
+                                                 table, lengths)
+        owned = {1, 2, 3}
+        poison = np.array(k_pool)
+        for blk in range(nb):
+            if blk not in owned:
+                poison[blk] = 1e9
+        dirty = ops.flash_attention_paged_decode(
+            q, jnp.asarray(poison), v_pool, table, lengths)
+        np.testing.assert_allclose(np.asarray(dirty), np.asarray(clean),
+                                   atol=2e-5, rtol=2e-5)
+        ref = attend_paged(q, jnp.asarray(poison), v_pool, table,
+                           lengths, impl="xla")
+        np.testing.assert_allclose(np.asarray(dirty), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
 class TestSSDVjp:
     """Pallas SSD forward with the exact XLA-scan VJP: values AND grads
     must match the XLA path bit-for-tolerance (train/engine.py routes

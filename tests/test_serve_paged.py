@@ -1,0 +1,523 @@
+"""Paged KV serving tier (runtime/serve.py + runtime/paged.py).
+
+The load-bearing property of the whole tier is **bit-equality with the
+linear engine**: block-table indirection, shared-prefix re-linking,
+copy-on-write, preemption/resume and self-speculative decoding are all
+cache-placement and scheduling transforms — none of them may change a
+single emitted token.  The tests here pin that, plus the host-side
+allocator/trie invariants and the three scheduler bugfixes that rode
+along (idle-slot position drift, silently-dropped rejected admissions,
+and run(max_steps) having no way to report unfinished requests).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.model import LM
+from repro.runtime.paged import BlockPool, NoFreeBlocks, PrefixTrie
+from repro.runtime.serve import Request, ServeConfig, Server, sample_tokens
+
+pytestmark = pytest.mark.filterwarnings("ignore::UserWarning")
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_arch("qwen2-1.5b").reduced()
+    model = LM(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def recurrent():
+    cfg = get_arch("xlstm-125m").reduced()
+    model = LM(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, n, rng=None, lo=3, hi=12):
+    rng = rng or np.random.default_rng(0)
+    return [rng.integers(0, cfg.vocab,
+                         size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator + prefix trie (no model, no device)
+# ---------------------------------------------------------------------------
+
+class TestBlockPool:
+    def test_block_zero_is_reserved(self):
+        pool = BlockPool(4)
+        got = {pool.alloc() for _ in range(3)}
+        assert got == {1, 2, 3}
+        with pytest.raises(NoFreeBlocks):
+            pool.alloc()
+
+    def test_refcount_frees_at_zero(self):
+        pool = BlockPool(3)
+        b = pool.alloc()
+        pool.incref(b)
+        assert not pool.decref(b)       # one holder left
+        assert pool.decref(b)           # now free
+        assert pool.n_free == 2
+
+    def test_lifo_recycling(self):
+        """Freed blocks are handed out again immediately — the property
+        that exposed the negative-index scatter bug (a stale write
+        routed through a wrapped -1 sentinel lands in a *live* block
+        the moment the pool is tight)."""
+        pool = BlockPool(3)
+        a = pool.alloc()
+        pool.alloc()
+        pool.decref(a)
+        assert pool.alloc() == a
+
+    def test_too_small_pool_rejected(self):
+        with pytest.raises(ValueError):
+            BlockPool(1)
+
+
+class TestPrefixTrie:
+    def _pt(self, n_blocks=16, bl=4):
+        pool = BlockPool(n_blocks)
+        return pool, PrefixTrie(pool, bl)
+
+    def test_match_returns_referenced_blocks(self):
+        pool, trie = self._pt()
+        toks = list(range(8))
+        blocks = [pool.alloc(), pool.alloc()]
+        trie.insert(toks, blocks)
+        full, part = trie.match(toks + [99])
+        assert full == blocks and part is None
+        # one ref per holder: slot + trie + the match's caller ref
+        assert pool.ref[blocks[0]] == 3
+
+    def test_partial_match_is_cow_source(self):
+        pool, trie = self._pt()
+        toks = [1, 2, 3, 4, 5, 6, 7, 8]
+        blocks = [pool.alloc(), pool.alloc()]
+        trie.insert(toks, blocks)
+        full, part = trie.match([1, 2, 3, 4, 5, 6, 99, 99])
+        assert full == [blocks[0]]
+        assert part == (blocks[1], 2)   # agrees on [5, 6] only
+
+    def test_insert_partial_then_match(self):
+        """A preempted slot's partially-filled tail block re-links on
+        resume: the partial node is found by the CoW scan with exactly
+        the registered token count."""
+        pool, trie = self._pt()
+        toks = [1, 2, 3, 4, 5, 6]       # one full block + 2-token tail
+        b0, b1 = pool.alloc(), pool.alloc()
+        trie.insert(toks, [b0])
+        assert trie.insert_partial(toks, b1)
+        full, part = trie.match(toks + [7])
+        assert full == [b0] and part == (b1, 2)
+        # unregistered path prefix -> no-op, no ref leaked
+        assert not trie.insert_partial([9, 9, 9, 9, 9], b1)
+
+    def test_evict_drops_lru_leaf_only(self):
+        pool, trie = self._pt(n_blocks=4, bl=2)
+        a, b, c = pool.alloc(), pool.alloc(), pool.alloc()
+        trie.insert([1, 2, 3, 4], [a, b])   # chain: a -> b
+        trie.insert([5, 6], [c])
+        pool.decref(a), pool.decref(b), pool.decref(c)  # trie-only refs
+        trie.match([1, 2, 3, 4])            # refresh chain; c is LRU
+        full, part = trie.match([1, 2, 3, 4])
+        for blk in full:
+            pool.decref(blk)
+        assert trie.evict(1)
+        assert pool.ref[c] == 0             # LRU leaf freed
+        assert pool.ref[a] > 0 and pool.ref[b] > 0
+
+    def test_clear_releases_all_refs(self):
+        pool, trie = self._pt()
+        blocks = [pool.alloc() for _ in range(3)]
+        trie.insert(list(range(12)), blocks)
+        for b in blocks:
+            pool.decref(b)                  # drop the slot refs
+        trie.clear()
+        assert pool.n_free == 15
+
+
+# ---------------------------------------------------------------------------
+# paged engine == linear engine, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestPagedEquivalence:
+    def _run(self, model, params, scfg, prompts, budget=8):
+        srv = Server(model, params, scfg)
+        for p in prompts:
+            srv.submit(p, budget)
+        return srv.run(), srv
+
+    def test_greedy_matches_linear(self, dense):
+        cfg, model, params = dense
+        prompts = _prompts(cfg, 6)
+        ref, _ = self._run(model, params,
+                           ServeConfig(slots=4, max_len=32), prompts)
+        out, srv = self._run(
+            model, params,
+            ServeConfig(slots=4, max_len=32, paged=True, block_len=8),
+            prompts)
+        assert out == ref
+        assert srv.finished == {r: "length" for r in ref}
+
+    def test_sampled_matches_linear(self, dense):
+        """Same PRNG keys (rid, token index) -> same sampled stream
+        regardless of the cache layout."""
+        cfg, model, params = dense
+        prompts = _prompts(cfg, 4)
+        scfg = dict(slots=2, max_len=32, temperature=0.8, top_k=16,
+                    seed=11)
+        ref, _ = self._run(model, params, ServeConfig(**scfg), prompts)
+        out, _ = self._run(model, params,
+                           ServeConfig(paged=True, block_len=8, **scfg),
+                           prompts)
+        assert out == ref
+
+    def test_chunked_equals_tokenwise_paged(self, dense):
+        cfg, model, params = dense
+        prompt = _prompts(cfg, 1, np.random.default_rng(5), 9, 14)[0]
+        scfg = ServeConfig(slots=2, max_len=32, paged=True, block_len=8,
+                           prefill_chunk=8)
+        a = Server(model, params, scfg)
+        a.admit(prompt, 0)
+        b = Server(model, params, scfg)
+        b.admit(prompt, 0, method="tokenwise")
+        assert a.generate(6)[0] == b.generate(6)[0]
+        np.testing.assert_array_equal(a.prefill_logits[0],
+                                      b.prefill_logits[0])
+
+    def test_recurrent_family_rejected(self, recurrent):
+        cfg, model, params = recurrent
+        with pytest.raises(ValueError, match="paged"):
+            Server(model, params,
+                   ServeConfig(slots=2, max_len=32, paged=True,
+                               block_len=8))
+
+    def test_block_len_must_divide_max_len(self, dense):
+        cfg, model, params = dense
+        with pytest.raises(ValueError, match="block_len"):
+            Server(model, params,
+                   ServeConfig(slots=2, max_len=30, paged=True,
+                               block_len=8))
+
+    def test_full_length_prompt_retires_immediately(self, dense):
+        """len(prompt) == max_len: the prefill-sampled token is the one
+        and only output (the cache is full; a decode would index past
+        its end)."""
+        cfg, model, params = dense
+        prompt = _prompts(cfg, 1, np.random.default_rng(2), 16, 17)[0]
+        srv = Server(model, params,
+                     ServeConfig(slots=1, max_len=16, paged=True,
+                                 block_len=8, prefix_cache=False))
+        rid = srv.submit(prompt)
+        res = srv.run()
+        assert len(res[rid]) == 1
+        assert srv.finished[rid] == "max_len"
+        assert srv.pool.n_free == srv.n_blocks - 1   # all released
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix reuse + copy-on-write
+# ---------------------------------------------------------------------------
+
+class TestPrefixReuse:
+    def test_shared_prefix_skips_prefill_dispatches(self, dense):
+        cfg, model, params = dense
+        rng = np.random.default_rng(4)
+        pre = rng.integers(0, cfg.vocab, size=16).tolist()
+        prompts = [pre + rng.integers(0, cfg.vocab, size=4).tolist()
+                   for _ in range(4)]
+
+        def run(prefix_cache):
+            srv = Server(model, params,
+                         ServeConfig(slots=2, max_len=32, paged=True,
+                                     block_len=8,
+                                     prefix_cache=prefix_cache))
+            for p in prompts:
+                srv.submit(p, 3)
+            return srv.run(), srv
+
+        out_on, on = run(True)
+        out_off, off = run(False)
+        assert out_on == out_off                    # reuse is invisible
+        assert on.prefill_dispatches < off.prefill_dispatches
+        assert on.prompt_cache_hits >= 16 * 3       # later 3 admissions
+
+    def test_cow_isolation(self, dense):
+        """Two prompts diverging mid-block: the second request CoWs the
+        shared block, and neither stream is disturbed — both match the
+        prefix-cache-off reference."""
+        cfg, model, params = dense
+        rng = np.random.default_rng(6)
+        pre = rng.integers(0, cfg.vocab, size=12).tolist()  # 1.5 blocks
+        pa = pre + rng.integers(0, cfg.vocab, size=4).tolist()
+        pb = pre + rng.integers(0, cfg.vocab, size=4).tolist()
+
+        def run(prefix_cache):
+            srv = Server(model, params,
+                         ServeConfig(slots=2, max_len=32, paged=True,
+                                     block_len=8,
+                                     prefix_cache=prefix_cache))
+            ra, rb = srv.submit(pa, 5), srv.submit(pb, 5)
+            res = srv.run()
+            return res[ra], res[rb], srv
+
+        a_on, b_on, on = run(True)
+        a_off, b_off, _ = run(False)
+        assert a_on == a_off and b_on == b_off
+        assert on.prompt_cache_hits > 0
+
+    def test_trie_refs_drain_after_retirement(self, dense):
+        """Every pool block is reclaimable: retire everything, clear the
+        trie, and the pool must be fully free (no leaked refcount)."""
+        cfg, model, params = dense
+        srv = Server(model, params,
+                     ServeConfig(slots=2, max_len=32, paged=True,
+                                 block_len=8))
+        for p in _prompts(cfg, 4, np.random.default_rng(8)):
+            srv.submit(p, 4)
+        srv.run()
+        srv.trie.clear()
+        assert srv.pool.n_free == srv.n_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# memory-bound scheduling: NoFreeBlocks requeue + preemption/resume
+# ---------------------------------------------------------------------------
+
+class TestMemoryBound:
+    def test_no_free_blocks_requeues_not_drops(self, dense):
+        """A pool that fits one request at a time: the second admission
+        hits NoFreeBlocks, stays queued, and completes after the first
+        retires — same outputs as an unconstrained linear engine."""
+        cfg, model, params = dense
+        prompts = _prompts(cfg, 2, np.random.default_rng(1), 9, 12)
+        lin = Server(model, params, ServeConfig(slots=2, max_len=16))
+        for p in prompts:
+            lin.submit(p, 4)
+        ref = lin.run()
+
+        srv = Server(model, params,
+                     ServeConfig(slots=2, max_len=16, paged=True,
+                                 block_len=8, n_blocks=3))  # mb + 1
+        rids = [srv.submit(p, 4) for p in prompts]
+        ev = srv.admit_waiting()
+        assert srv.active[0] and not srv.active[1]   # 2nd waits
+        assert srv.pending()[rids[1]] == "waiting"
+        res = srv.run()
+        assert res == ref
+        assert srv.preemptions == 0                  # admissions never preempt
+
+    def test_preemption_resume_is_bit_exact(self, dense):
+        """8 logical requests on a half-size pool: decode-time block
+        exhaustion preempts the youngest slot, the resume re-links /
+        recomputes, and every stream still matches the unconstrained
+        linear engine bit for bit."""
+        cfg, model, params = dense
+        prompts = _prompts(cfg, 6, np.random.default_rng(0))
+        lin = Server(model, params, ServeConfig(slots=6, max_len=32))
+        for p in prompts:
+            lin.submit(p, 20)
+        ref = lin.run()
+
+        srv = Server(model, params,
+                     ServeConfig(slots=6, max_len=32, paged=True,
+                                 block_len=8, n_blocks=13))
+        for p in prompts:
+            srv.submit(p, 20)
+        res = srv.run()
+        assert srv.preemptions > 0
+        assert res == ref
+        assert srv.pending() == {}
+
+    def test_preemption_resume_scan_impl_bit_exact(self, dense):
+        """Same memory-bound run under the forced-scan prefill (the
+        configuration whose resume path is exact by construction: scan
+        prefill IS the sequential decode step)."""
+        cfg, model, params = dense
+        prompts = _prompts(cfg, 6, np.random.default_rng(0))
+        lin = Server(model, params,
+                     ServeConfig(slots=6, max_len=32,
+                                 prefill_impl="scan"))
+        for p in prompts:
+            lin.submit(p, 20)
+        ref = lin.run()
+
+        srv = Server(model, params,
+                     ServeConfig(slots=6, max_len=32, paged=True,
+                                 block_len=8, n_blocks=13,
+                                 prefill_impl="scan"))
+        for p in prompts:
+            srv.submit(p, 20)
+        res = srv.run()
+        assert srv.preemptions > 0
+        assert res == ref
+
+
+# ---------------------------------------------------------------------------
+# self-speculative decoding
+# ---------------------------------------------------------------------------
+
+class TestSpeculative:
+    def test_spec_matches_linear_greedy(self, dense):
+        cfg, model, params = dense
+        prompts = _prompts(cfg, 4)
+        lin = Server(model, params, ServeConfig(slots=2, max_len=32))
+        for p in prompts:
+            lin.submit(p, 8)
+        ref = lin.run()
+
+        srv = Server(model, params,
+                     ServeConfig(slots=2, max_len=32, paged=True,
+                                 block_len=8, spec_k=4))
+        for p in prompts:
+            srv.submit(p, 8)
+        res = srv.run()
+        assert res == ref
+        assert srv.verify_dispatches > 0
+        # K tokens per dispatch: strictly fewer decode rounds than the
+        # 8+ sequential steps the linear engine paid per slot pair
+        assert srv.decode_dispatches < lin.decode_dispatches
+
+    def test_spec_matches_linear_sampled(self, dense):
+        """The draft pass runs the exact sequential decode step with the
+        exact per-(rid, index) keys, so even *sampled* streams are
+        bit-equal — speculation only changes how many dispatches it
+        takes to emit them."""
+        cfg, model, params = dense
+        prompts = _prompts(cfg, 3)
+        kw = dict(slots=3, max_len=32, temperature=0.7, top_k=8, seed=5)
+        lin = Server(model, params, ServeConfig(**kw))
+        for p in prompts:
+            lin.submit(p, 8)
+        ref = lin.run()
+
+        srv = Server(model, params,
+                     ServeConfig(paged=True, block_len=8, spec_k=3,
+                                 **kw))
+        for p in prompts:
+            srv.submit(p, 8)
+        assert srv.run() == ref
+
+    def test_spec_without_verify_same_tokens(self, dense):
+        """Emitted tokens always come from the draft pass; the verifier
+        only decides how many to accept per round.  Disabling it must
+        not change a single token."""
+        cfg, model, params = dense
+        prompts = _prompts(cfg, 2)
+
+        def run(verify):
+            srv = Server(model, params,
+                         ServeConfig(slots=2, max_len=32, paged=True,
+                                     block_len=8, spec_k=4,
+                                     spec_verify=verify))
+            for p in prompts:
+                srv.submit(p, 8)
+            return srv.run(), srv
+
+        with_v, sv = run(True)
+        without_v, sn = run(False)
+        assert with_v == without_v
+        assert sv.verify_dispatches > 0 and sn.verify_dispatches == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler bugfix regressions
+# ---------------------------------------------------------------------------
+
+class TestSchedulerBugfixes:
+    def test_idle_slot_position_does_not_drift(self, dense):
+        """decode_once advanced *every* slot's host position mirror —
+        an idle slot drifted one entry per pool-wide step, so the next
+        request admitted into it inherited a phantom offset."""
+        cfg, model, params = dense
+        srv = Server(model, params, ServeConfig(slots=3, max_len=32))
+        prompt = _prompts(cfg, 1)[0]
+        srv.admit(prompt, 1)            # slots 0 and 2 stay idle
+        for _ in range(4):
+            srv.decode_once()
+        assert srv.pos[0] == 0 and srv.pos[2] == 0
+        assert srv.pos[1] == len(prompt) + 4
+
+    def test_mid_run_retirement_freezes_position(self, dense):
+        """Once a slot retires its position must hold while the rest of
+        the pool keeps decoding (the drift bug's steady-state form)."""
+        cfg, model, params = dense
+        p0, p1 = _prompts(cfg, 2)
+        srv = Server(model, params, ServeConfig(slots=2, max_len=32))
+        srv.admit(p0, 0, max_new_tokens=2)   # retires early
+        srv.admit(p1, 1, max_new_tokens=10)
+        srv.run()
+        assert srv.pos[0] == len(p0) + 1     # prompt + 1 decoded entry
+
+    def test_invalid_queued_request_rejected_not_dropped(self, dense):
+        """admit_waiting popped the request *before* admission could
+        fail — an invalid request vanished without a trace and the
+        exception killed the scheduler step.  Now it retires with
+        reason "rejected" and the queue keeps draining."""
+        cfg, model, params = dense
+        srv = Server(model, params, ServeConfig(slots=1, max_len=16))
+        bad = Request(rid=97, prompt=list(range(99)))   # > max_len
+        srv.waiting.append(bad)                         # bypass submit()
+        good = srv.submit(_prompts(cfg, 1)[0], 3)
+        events = srv.admit_waiting()
+        assert ("retire", 97, "rejected") in events
+        assert srv.finished[97] == "rejected"
+        assert srv.outputs[97] == []
+        res = srv.run()
+        assert len(res[good]) == 3                      # queue drained
+
+    def test_pending_reports_unfinished_requests(self, dense):
+        """run(max_steps) used to return outputs with no way to tell a
+        finished stream from one it cut off."""
+        cfg, model, params = dense
+        srv = Server(model, params, ServeConfig(slots=1, max_len=32))
+        rids = [srv.submit(p, 6) for p in _prompts(cfg, 3)]
+        srv.run(max_steps=2)
+        pend = srv.pending()
+        assert pend[rids[0]] == "inflight"
+        assert pend[rids[1]] == "waiting"
+        assert pend[rids[2]] == "waiting"
+        srv.run()
+        assert srv.pending() == {}
+
+    def test_generate_clamps_budget_never_raises_it(self, dense):
+        """generate(n) is a *clamp*: a request admitted with a smaller
+        max_new_tokens keeps its own budget."""
+        cfg, model, params = dense
+        p0, p1 = _prompts(cfg, 2)
+        srv = Server(model, params, ServeConfig(slots=2, max_len=32))
+        ra = srv.admit(p0, 0, max_new_tokens=3)
+        rb = srv.admit(p1, 1)
+        outs = srv.generate(8)
+        assert len(outs[0]) == 3 and len(outs[1]) == 8
+        assert srv.finished[ra] == "length"
+
+
+class TestSampleTokensPoolInvariance:
+    def test_per_row_keys_make_rows_independent(self):
+        """With per-row keys, a row's sampled token must not depend on
+        what else is in the batch — the property that makes a request's
+        stream invariant to pool composition under temperature."""
+        rng = np.random.default_rng(3)
+        logits = jnp.asarray(rng.normal(size=(5, 64)).astype(np.float32))
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(5))
+        full = np.asarray(sample_tokens(logits, keys, temperature=0.9,
+                                        top_k=12))
+        for i in range(5):
+            solo = np.asarray(sample_tokens(logits[i:i + 1],
+                                            keys[i:i + 1],
+                                            temperature=0.9, top_k=12))
+            assert solo[0] == full[i]
+
+    def test_batch_key_differs_from_row_keys_shape_only(self):
+        """Single-key mode still works (shape [2] key broadcasts)."""
+        logits = jnp.asarray(
+            np.random.default_rng(4).normal(size=(3, 32)))
+        out = sample_tokens(logits, jax.random.PRNGKey(0),
+                            temperature=1.0, top_k=4)
+        assert out.shape == (3,)
