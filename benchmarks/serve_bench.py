@@ -44,6 +44,7 @@ from repro.core.builders import build_graph  # noqa: E402
 from repro.core.plan import ShardingPlan  # noqa: E402
 from repro.core.solver import solve_mesh  # noqa: E402
 from repro.launch.serve import run_workload  # noqa: E402
+from repro.obs.stats import percentile  # noqa: E402
 from repro.models.model import LM, prefill_parallel_ok  # noqa: E402
 from repro.runtime.serve import ServeConfig, Server  # noqa: E402
 from repro.verify.calibration import verify_axes  # noqa: E402
@@ -334,10 +335,10 @@ def bench_paged_concurrency(smoke: bool) -> dict:
                               / rep["linear"]["ttft_p95_s"])
     for n in engines:
         pool = samples[n]
-        best[n]["itl_p50_s"] = float(np.percentile(pool["itl_s"], 50))
-        best[n]["itl_p95_s"] = float(np.percentile(pool["itl_s"], 95))
-        best[n]["ttft_p50_s"] = float(np.percentile(pool["ttft_s"], 50))
-        best[n]["ttft_p95_s"] = float(np.percentile(pool["ttft_s"], 95))
+        best[n]["itl_p50_s"] = percentile(pool["itl_s"], 50)
+        best[n]["itl_p95_s"] = percentile(pool["itl_s"], 95)
+        best[n]["ttft_p50_s"] = percentile(pool["ttft_s"], 50)
+        best[n]["ttft_p95_s"] = percentile(pool["ttft_s"], 95)
     m_lin, m_pg, m_hc, m_sp = (best[n] for n in
                                ("linear", "paged", "paged_hc",
                                 "paged_spec"))

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Sequence
 
+from ..obs.metrics import default_registry as _default_registry
 from .graph import Graph, OpSpec
 from .tiling import (REDUCED, REPLICATE, Part, Tiling, conversion_cost,
                      conversion_kind, paper_naive_conversion_cost)
@@ -302,6 +303,16 @@ def op_signature(g: Graph, op: OpSpec, arity: int,
             tuple(tsig))
 
 
+# solver memo-cache effectiveness, on the process-global registry (the
+# launch CLIs dump it alongside their run metrics)
+_MEMO_HITS = _default_registry().counter(
+    "solver.cost_table_memo_hits",
+    help="cached_cost_table signature-cache hits")
+_MEMO_MISSES = _default_registry().counter(
+    "solver.cost_table_memo_misses",
+    help="cached_cost_table signature-cache misses (tables built)")
+
+
 def cached_cost_table(g: Graph, op: OpSpec, arity: int,
                       choices: Dict[str, List[Tiling]],
                       cache: Dict[tuple, Dict[tuple, float]],
@@ -315,7 +326,9 @@ def cached_cost_table(g: Graph, op: OpSpec, arity: int,
     key = (op_signature(g, op, arity, choices), naive)
     tbl = cache.get(key)
     if tbl is not None:
+        _MEMO_HITS.inc()
         return tbl
+    _MEMO_MISSES.inc()
     tensors = g.op_tensors(op)
     lists = [choices[t] for t in tensors]
     tbl = {}

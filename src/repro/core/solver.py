@@ -28,6 +28,7 @@ import itertools
 import os
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from ..obs.tracing import span as _span
 from .cost import (Assignment, cached_cost_table, graph_cost,
                    memory_penalties, op_cost, op_cost_table,
                    tensor_tiling_choices)
@@ -164,22 +165,25 @@ def _solve_one_cut_fast(g: Graph, arity: int, fixed: Optional[Assignment],
     # adaptive-beam widening: (op_ids, base table, repeat, live_after)
     steps = []
     live: List[int] = []
-    for i, op in enumerate(order):
-        op_ts = g.op_tensors(op)
-        op_ids = tuple(tid[t] for t in op_ts)
-        tbl = cached_cost_table(g, op, arity, choice_map, cache)
-        live_after = tuple(sorted(set(
-            j for j in set(live) | set(op_ids) if last_use[j] > i)))
-        steps.append((op, op_ids, tbl, op.repeat, live_after))
-        live = list(live_after)
+    with _span("solver.cost_tables", ops=len(order), arity=arity):
+        for i, op in enumerate(order):
+            op_ts = g.op_tensors(op)
+            op_ids = tuple(tid[t] for t in op_ts)
+            tbl = cached_cost_table(g, op, arity, choice_map, cache)
+            live_after = tuple(sorted(set(
+                j for j in set(live) | set(op_ids) if last_use[j] > i)))
+            steps.append((op, op_ids, tbl, op.repeat, live_after))
+            live = list(live_after)
 
     # incumbent pass: a narrow-beam run gives a feasible upper bound U;
     # the main run then applies *dominance pruning* — any DP state whose
     # accumulated cost exceeds U cannot complete below U (all future op
     # costs and penalties are >= 0), so it is dropped.  Sound, so when no
     # beam cap is hit the result is exact.
-    inc_cost, inc_node, _ = _run_dp(steps, n_choice, pen_by_id, tb_by_id,
-                                    _INCUMBENT_BEAM, float("inf"), g)
+    with _span("solver.dp.incumbent", beam=_INCUMBENT_BEAM):
+        inc_cost, inc_node, _ = _run_dp(steps, n_choice, pen_by_id,
+                                        tb_by_id, _INCUMBENT_BEAM,
+                                        float("inf"), g)
 
     def _ub(c: float) -> float:
         return c * (1.0 + 1e-12) + 1e-6
@@ -196,29 +200,32 @@ def _solve_one_cut_fast(g: Graph, arity: int, fixed: Optional[Assignment],
             return inc_cost, inc_node, True
 
     ub = _ub(inc_cost)
-    if beam == "auto":
-        b = AUTO_BEAM_START
-        best: Optional[Tuple[float, object]] = None
-        exact = False
-        while True:
-            cost, node, hit = _run(b, ub)
-            improved = best is None or \
-                cost < best[0] - _AUTO_MIN_IMPROVE * abs(best[0])
-            if best is None or cost < best[0]:
-                best = (cost, node)
-                ub = min(ub, _ub(cost))
-            # an un-truncated run is exact (ub pruning is sound), so its
-            # cost is the optimum; it proves the kept solution optimal
-            # whenever the kept cost is not worse.
-            if not hit and best[0] <= cost + 1e-9 * abs(cost):
-                exact = True
-            if not improved or not hit or b >= AUTO_BEAM_MAX:
-                break
-            b *= 4
-        cost, node = best
-    else:
-        cost, node, hit = _run(beam, ub)
-        exact = not hit
+    with _span("solver.dp", ops=len(order), tensors=len(names)) as sp:
+        if beam == "auto":
+            b = AUTO_BEAM_START
+            best: Optional[Tuple[float, object]] = None
+            exact = False
+            while True:
+                cost, node, hit = _run(b, ub)
+                improved = best is None or \
+                    cost < best[0] - _AUTO_MIN_IMPROVE * abs(best[0])
+                if best is None or cost < best[0]:
+                    best = (cost, node)
+                    ub = min(ub, _ub(cost))
+                # an un-truncated run is exact (ub pruning is sound), so
+                # its cost is the optimum; it proves the kept solution
+                # optimal whenever the kept cost is not worse.
+                if not hit and best[0] <= cost + 1e-9 * abs(cost):
+                    exact = True
+                if not improved or not hit or b >= AUTO_BEAM_MAX:
+                    break
+                b *= 4
+            cost, node = best
+            sp.set(beam=b, exact=exact)
+        else:
+            cost, node, hit = _run(beam, ub)
+            exact = not hit
+            sp.set(beam=beam, exact=exact)
 
     full = dict(fixed)
     full.update(base_assign)
@@ -423,6 +430,16 @@ def solve_one_cut_bruteforce(g: Graph, arity: int,
     benchmarks).  ``workers``: fan the assignment product out over
     processes with concurrent.futures (0/None on small products = serial);
     the pivot is the widest-choice tensor."""
+    with _span("solver.oracle", arity=arity, tensors=len(g.tensors)):
+        return _solve_one_cut_bruteforce(g, arity, fixed, mem_scale,
+                                         workers, terms)
+
+
+def _solve_one_cut_bruteforce(g: Graph, arity: int,
+                              fixed: Optional[Assignment],
+                              mem_scale: float,
+                              workers: Optional[int],
+                              terms: Sequence) -> OneCutSolution:
     fixed = fixed or {}
     names = list(g.tensors)
     choice_lists = [
@@ -529,11 +546,13 @@ def solve_mesh(g: Graph, axes: Sequence[MeshAxis],
     total_b = 0.0
     total_s = 0.0
     for ax in axes:
-        sol = solve_one_cut(cur, ax.size,
-                            fixed=fixed_per_axis.get(ax.name), beam=beam,
-                            mem_scale=mem_scale, optimize=optimize,
-                            cost_cache=cost_cache,
-                            terms=_axis_terms(terms, compute, ax))
+        with _span("solver.axis", axis=ax.name, size=ax.size):
+            sol = solve_one_cut(cur, ax.size,
+                                fixed=fixed_per_axis.get(ax.name),
+                                beam=beam,
+                                mem_scale=mem_scale, optimize=optimize,
+                                cost_cache=cost_cache,
+                                terms=_axis_terms(terms, compute, ax))
         weighted = sol.cost * groups
         per_axis.append(sol.assignment)
         per_bytes.append(weighted)
@@ -1132,6 +1151,23 @@ def solve_pipeline(g: Graph, axes: Sequence[MeshAxis], *,
                    mem_scale: float = 1.0,
                    peak_flops: float = DEFAULT_PEAK_FLOPS,
                    cost_cache: Optional[dict] = None) -> PipelineSolution:
+    with _span("solver.pipeline_dp", n_micro=n_micro) as sp:
+        sol = _solve_pipeline(g, axes, n_micro=n_micro,
+                              stage_counts=stage_counts, beam=beam,
+                              mem_scale=mem_scale,
+                              peak_flops=peak_flops,
+                              cost_cache=cost_cache)
+        sp.set(n_stages=sol.n_stages)
+        return sol
+
+
+def _solve_pipeline(g: Graph, axes: Sequence[MeshAxis], *,
+                    n_micro: int = 8,
+                    stage_counts: Optional[Sequence[int]] = None,
+                    beam: BeamSpec = "auto",
+                    mem_scale: float = 1.0,
+                    peak_flops: float = DEFAULT_PEAK_FLOPS,
+                    cost_cache: Optional[dict] = None) -> PipelineSolution:
     """Jointly choose pipeline stage cuts AND per-stage tilings.
 
     For every candidate stage count S (1 plus divisor-carvings of the
@@ -1277,6 +1313,18 @@ def solve_pipeline_bruteforce(g: Graph, axes: Sequence[MeshAxis], *,
     single-axis mesh (multi-axis inner solves are the same greedy chain
     as solve_mesh, which the oracle cannot enumerate); rejects wider
     meshes."""
+    with _span("solver.pipeline_oracle", n_micro=n_micro):
+        return _solve_pipeline_bruteforce(
+            g, axes, n_micro=n_micro, stage_counts=stage_counts,
+            mem_scale=mem_scale, peak_flops=peak_flops)
+
+
+def _solve_pipeline_bruteforce(g: Graph, axes: Sequence[MeshAxis], *,
+                               n_micro: int = 8,
+                               stage_counts: Optional[Sequence[int]] = None,
+                               mem_scale: float = 1.0,
+                               peak_flops: float = DEFAULT_PEAK_FLOPS
+                               ) -> PipelineSolution:
     from .costterms import BubbleTerm
 
     for _n, _sa, inner_axes in pipeline_stage_options(axes):

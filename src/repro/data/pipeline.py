@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, ShapeConfig
+from ..obs.tracing import span as _span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,7 +120,8 @@ class BatchFeed:
     def get(self) -> Dict[str, object]:
         """Next step's device batch (blocks on the prefetch queue).
         Re-raises any exception the producer thread hit."""
-        step, batch = self._q.get()
+        with _span("train.data_wait"):
+            step, batch = self._q.get()
         if isinstance(batch, BaseException):
             raise batch
         return batch

@@ -28,6 +28,7 @@ from ..core.builders import build_graph
 from ..core.plan import ShardingPlan
 from ..core.solver import MeshAxis, solve_mesh
 from ..models.model import LM
+from ..obs.tracing import span as _span
 from ..models.sharding import CACHE_RULES, batch_pspec, tree_shardings
 from ..optim.adamw import AdamWConfig, apply_updates, init_state
 from .mesh import solver_axes
@@ -43,6 +44,26 @@ CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 def plan_cache_path(arch: str, shape: str, mesh_name: str) -> str:
     os.makedirs(CACHE_DIR, exist_ok=True)
     return os.path.join(CACHE_DIR, f"{arch}_{shape}_{mesh_name}.json")
+
+
+def _executed_breakdown(g, axes, per_axis, kind: str) -> Dict[str, Any]:
+    """Predicted system-wide wire bytes of the *as-executed* projection
+    of a solved tiling — grads/opt state follow what the compiled
+    program can actually shard (the same projection the CONFORMANCE
+    calibration cells price), split by collective kind and phase.  This
+    is the drift gauge's predicted side (obs.drift), stored in the plan
+    record so launches compare against it without re-solving."""
+    # lazy: verify imports this module (cycle otherwise)
+    if kind == "train":
+        from ..verify.train_cell import train_faithful_assignments
+        executed = train_faithful_assignments(g, per_axis)
+    else:
+        from ..verify.calibration import faithful_assignments
+        executed = faithful_assignments(g, per_axis)
+    from ..core.solver import solution_breakdown
+    br = solution_breakdown(g, axes, executed)
+    return {"total": br["total"], "by_kind": br["by_kind"],
+            "by_phase": br["by_phase"]}
 
 
 def solve_cell_plan(cfg: ArchConfig, shape: ShapeConfig,
@@ -70,11 +91,14 @@ def solve_cell_plan(cfg: ArchConfig, shape: ShapeConfig,
             return json.load(f)
     g = build_graph(cfg, shape, **(graph_kwargs or {}))
     t0 = time.time()
-    if capacity:
-        from ..core.solver import solve_mesh_capacity
-        sol = solve_mesh_capacity(g, axes, beam=beam, compute=compute)
-    else:
-        sol = solve_mesh(g, axes, beam=beam, compute=compute)
+    with _span("compile.solve_plan", arch=cfg.name, shape=shape.name,
+               mesh=mesh_name):
+        if capacity:
+            from ..core.solver import solve_mesh_capacity
+            sol = solve_mesh_capacity(g, axes, beam=beam,
+                                      compute=compute)
+        else:
+            sol = solve_mesh(g, axes, beam=beam, compute=compute)
     plan = ShardingPlan.from_graph_solution(sol, g)
     rec = {
         "mesh_axes": list(plan.mesh_axis_names),
@@ -83,6 +107,8 @@ def solve_cell_plan(cfg: ArchConfig, shape: ShapeConfig,
         "per_axis_bytes": sol.per_axis_bytes,
         "total_seconds": sol.total_seconds,
         "solve_time": time.time() - t0,
+        "breakdown": _executed_breakdown(g, axes, sol.per_axis,
+                                         shape.kind),
     }
     if compute is not None:
         from ..core.solver import solution_compute_seconds
@@ -170,6 +196,7 @@ def compile_step(cfg: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     decode), lower and compile it on ``mesh``.  Returns
     (compiled, lower_seconds, compile_seconds)."""
     t0 = time.time()
+    p0 = time.perf_counter()
     model = LM(cfg, plan=plan, attn_impl=attn_impl, mesh=mesh,
                layer_loop=layer_loop)
     key = jax.random.PRNGKey(0)
@@ -227,6 +254,10 @@ def compile_step(cfg: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                              donate_argnums=(0, 1))
             lowered = jitted.lower(params_s, opt_s, ins)
         t_lower = time.time() - t0
-        compiled = lowered.compile()
+        from ..obs.tracing import record as _record_span
+        _record_span("compile.lower", p0, time.perf_counter(),
+                     arch=cfg.name, kind=shape.kind)
+        with _span("compile.xla", arch=cfg.name, kind=shape.kind):
+            compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     return compiled, t_lower, t_compile

@@ -67,18 +67,21 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="poisson arrival rate, requests/s")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(admit/prefill/decode/preempt spans)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's metrics registry as JSONL "
+                         "(TTFT/ITL histograms, pool utilization, "
+                         "drift gauges)")
+    ap.add_argument("--no-drift", action="store_true",
+                    help="skip the predicted-vs-measured wire-byte "
+                         "drift check (saves one decode-cell compile; "
+                         "drift needs --plan auto)")
     ap.add_argument("--min-decode-tput", type=float, default=None,
                     help="exit non-zero unless decode tok/s exceeds this "
                          "(CI smoke gate)")
     return ap
-
-
-def _percentile(xs, q):
-    if not xs:
-        return None
-    xs = sorted(xs)
-    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
-    return xs[i]
 
 
 def run_workload(srv, arrivals, gen):
@@ -141,6 +144,8 @@ def run_workload(srv, arrivals, gen):
         itls += [b - a for a, b in zip(ts, ts[1:])]
     ttfts = [first_tok_t[r] - submit_t[r] for r in first_tok_t]
     gen_toks = sum(len(ts) for ts in tok_times.values())
+    from ..obs import stats
+    _pct = stats.percentile
     return {
         "requests": len(tok_times),
         "generated_tokens": gen_toks,
@@ -154,10 +159,10 @@ def run_workload(srv, arrivals, gen):
         "decode_tok_per_s": (decode_toks / decode_s
                              if decode_s else None),
         "total_tok_per_s": gen_toks / total if total else None,
-        "ttft_p50_s": _percentile(ttfts, 0.50),
-        "ttft_p95_s": _percentile(ttfts, 0.95),
-        "itl_p50_s": _percentile(itls, 0.50),
-        "itl_p95_s": _percentile(itls, 0.95),
+        "ttft_p50_s": _pct(ttfts, 50.0),
+        "ttft_p95_s": _pct(ttfts, 95.0),
+        "itl_p50_s": _pct(itls, 50.0),
+        "itl_p95_s": _pct(itls, 95.0),
         # raw samples, for pooling percentiles across repeated runs
         # (callers serializing this dict should drop them)
         "itl_s": itls,
@@ -183,15 +188,21 @@ def main(argv=None) -> int:
     import jax
     import numpy as np
 
+    from .. import obs
     from ..configs.base import ShapeConfig, get_arch
     from ..models.model import LM
     from ..runtime.serve import ServeConfig, Server
+
+    if args.trace_out:
+        obs.enable(args.trace_out)
+    registry = obs.Registry()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
 
     plan = mesh = None
+    plan_rec = None
     if mesh_shape:
         from ..compat import make_compat_mesh
         axis_names = ("data", "model")[:len(mesh_shape)]
@@ -210,11 +221,11 @@ def main(argv=None) -> int:
                 f"serve{tag}{args.slots}x{args.max_len}",
                 args.max_len, args.slots, "decode")
             t0 = time.time()
-            rec = solve_cell_plan(cfg, shape, axes,
-                                  mesh_name=f"host{args.mesh}")
-            plan = plan_from_record(rec)
+            plan_rec = solve_cell_plan(cfg, shape, axes,
+                                       mesh_name=f"host{args.mesh}")
+            plan = plan_from_record(plan_rec)
             print(f"decode plan ({time.time() - t0:.1f}s, cached solve "
-                  f"{rec['solve_time']:.1f}s):")
+                  f"{plan_rec['solve_time']:.1f}s):")
             print(plan.describe())
 
     model = LM(cfg, plan=plan, mesh=mesh)
@@ -226,7 +237,38 @@ def main(argv=None) -> int:
                        block_len=args.block_len, n_blocks=args.n_blocks,
                        prefix_cache=not args.no_prefix_cache,
                        spec_k=args.spec_k)
-    srv = Server(model, params, scfg, mesh=mesh)
+    srv = Server(model, params, scfg, mesh=mesh, registry=registry)
+
+    # live mini-calibration (DESIGN.md §16): the plan's as-executed
+    # predicted wire bytes vs the compiled decode cell's collectives —
+    # the same comparison the CONFORMANCE decode cells declare a band
+    # for, emitted as gauges on this run's registry
+    drift_rec = None
+    if plan is not None and not args.no_drift:
+        breakdown = (plan_rec or {}).get("breakdown")
+        if breakdown is None:
+            print("drift: plan record predates breakdown support "
+                  "(stale cache) — skipping")
+        else:
+            from ..obs import drift as obs_drift
+            from .compile import (compile_step, input_specs,
+                                  normalize_moe_plan)
+            t0 = time.time()
+            compiled, _, _ = compile_step(
+                cfg, shape, normalize_moe_plan(plan, cfg), mesh,
+                input_specs(cfg, shape))
+            drift_rec = obs_drift.record_drift(
+                registry, breakdown["total"], compiled.as_text(),
+                jax.device_count(),
+                predicted_by_kind=breakdown.get("by_kind"))
+            print(f"drift: predicted "
+                  f"{drift_rec['predicted_wire_bytes'] / 1e6:.1f}MB, "
+                  f"measured "
+                  f"{drift_rec['measured_wire_bytes'] / 1e6:.1f}MB, "
+                  f"ratio {drift_rec['ratio']:.2f} "
+                  f"(band {drift_rec['band']}, "
+                  f"{'in' if drift_rec['in_band'] else 'OUT OF'} band; "
+                  f"{time.time() - t0:.1f}s compile)")
 
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or args.slots
@@ -267,6 +309,29 @@ def main(argv=None) -> int:
             "preemptions": srv.preemptions,
             "prompt_cache_hits": srv.prompt_cache_hits,
         }
+    if drift_rec is not None:
+        rec["drift"] = drift_rec
+
+    # registry sinks: latency histograms from the workload samples, rate
+    # gauges, plus the solver memo-cache counters from the global
+    # registry (the solve ran in this process)
+    registry.histogram("serve.ttft_s").observe_many(rec["ttft_s"])
+    registry.histogram("serve.itl_s").observe_many(rec["itl_s"])
+    if rec["decode_tok_per_s"] is not None:
+        registry.gauge("serve.decode_tok_per_s").set(
+            rec["decode_tok_per_s"])
+    if rec["total_tok_per_s"] is not None:
+        registry.gauge("serve.total_tok_per_s").set(
+            rec["total_tok_per_s"])
+    for m in obs.default_registry().collect():
+        if m["name"].startswith("solver.") and m["type"] == "counter":
+            registry.counter(m["name"]).inc(m["value"])
+    if args.metrics_out:
+        registry.dump_jsonl(args.metrics_out)
+        print(f"metrics registry -> {args.metrics_out}")
+    if args.trace_out:
+        obs.export(args.trace_out)
+        print(f"trace -> {args.trace_out}")
 
     def fmt(v, unit=""):
         return "n/a" if v is None else f"{v:,.1f}{unit}"

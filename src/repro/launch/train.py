@@ -57,7 +57,21 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="device-metric sync interval in steps: losses "
+                         "stay on device between boundaries so the host "
+                         "never blocks the dispatch pipeline per step")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(data wait / step dispatch / sync / ckpt "
+                         "spans)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's metrics registry as JSONL "
+                         "(step-time breakdown, drift gauges)")
+    ap.add_argument("--no-drift", action="store_true",
+                    help="skip the predicted-vs-measured wire-byte "
+                         "drift check (drift needs --plan auto)")
     ap.add_argument("--min-step-tput", type=float, default=None,
                     help="exit non-zero unless steady-state tokens/s "
                          "exceeds this (CI smoke gate)")
@@ -82,11 +96,16 @@ def main(argv=None) -> int:
 
     import jax
 
+    from .. import obs
     from ..configs.base import ShapeConfig, get_arch
     from ..data.pipeline import BatchFeed, DataConfig
     from ..models.model import LM
     from ..optim.adamw import AdamWConfig
     from ..train.engine import EngineConfig, TrainEngine
+
+    if args.trace_out:
+        obs.enable(args.trace_out)
+    registry = obs.Registry()
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -182,6 +201,33 @@ def main(argv=None) -> int:
     if state is None:
         state = engine.init_state(jax.random.PRNGKey(args.seed))
 
+    # live mini-calibration: the plan's as-executed predicted wire bytes
+    # vs the collectives in the engine's OWN compiled step (jax caches
+    # the executable, so the training loop below reuses this compile)
+    drift_rec = None
+    if plan is not None and not args.no_drift:
+        breakdown = (plan_rec or {}).get("breakdown")
+        if breakdown is None:
+            print("drift: plan record predates breakdown support "
+                  "(stale cache) — skipping")
+        else:
+            from ..obs import drift as obs_drift
+            from .compile import input_specs
+            t0 = time.time()
+            compiled = engine.lower_step(input_specs(cfg, shape))
+            drift_rec = obs_drift.record_drift(
+                registry, breakdown["total"], compiled.as_text(),
+                jax.device_count(),
+                predicted_by_kind=breakdown.get("by_kind"))
+            print(f"drift: predicted "
+                  f"{drift_rec['predicted_wire_bytes'] / 1e6:.1f}MB, "
+                  f"measured "
+                  f"{drift_rec['measured_wire_bytes'] / 1e6:.1f}MB, "
+                  f"ratio {drift_rec['ratio']:.2f} "
+                  f"(band {drift_rec['band']}, "
+                  f"{'in' if drift_rec['in_band'] else 'OUT OF'} band; "
+                  f"{time.time() - t0:.1f}s compile)")
+
     dcfg = DataConfig(seed=args.seed, vocab=cfg.vocab, seq_len=args.seq,
                       global_batch=args.batch)
     shardings = None
@@ -190,21 +236,54 @@ def main(argv=None) -> int:
 
     tokens_per_step = args.batch * args.seq
     warmup = min(args.warmup, max(0, (args.steps - start) - 1))
+    log_every = max(1, args.log_every)
     hist = []
     data_s = step_s = ckpt_s = 0.0
+    # device metrics are buffered and synced only at flush boundaries
+    # (log interval, warmup end, checkpoint, final step) — the old loop
+    # forced a device round-trip every step via float(loss), stalling
+    # the dispatch pipeline.  The warmup boundary always flushes, so
+    # each measured interval is entirely post-warmup.
+    pending = []                  # (step, device loss) since last flush
+    int_t0 = None                 # wall-clock start of current interval
+    int_data = 0.0                # data-wait seconds in current interval
     with BatchFeed(dcfg, start_step=start, shardings=shardings) as feed:
         for step in range(start, args.steps):
             ta = time.monotonic()
+            if int_t0 is None:
+                int_t0 = ta
             batch = feed.get()
             tb = time.monotonic()
+            int_data += tb - ta
             state, metrics = engine.step(state, batch)
-            loss = float(metrics["loss"])      # sync point
+            pending.append((step, metrics["loss"]))
+
+            at_ckpt = (args.ckpt_dir
+                       and (step + 1) % args.ckpt_every == 0)
+            flush = ((step + 1 - start) % log_every == 0
+                     or step - start == warmup - 1
+                     or step == args.steps - 1 or at_ckpt)
+            if not flush:
+                continue
+            with obs.span("train.sync", steps=len(pending)):
+                jax.block_until_ready(pending[-1][1])
             tc = time.monotonic()
-            if step - start >= warmup:
-                data_s += tb - ta
-                step_s += tc - tb
-            hist.append({"step": step, "loss": loss, "sec": tc - ta})
-            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            int_wall = tc - int_t0
+            sec_each = int_wall / len(pending)
+            measured = pending[0][0] - start >= warmup
+            if measured:
+                data_s += int_data
+                step_s += int_wall - int_data
+                registry.histogram("train.step_s").observe(
+                    sec_each - int_data / len(pending))
+            for s, dev_loss in pending:
+                hist.append({"step": s, "loss": float(dev_loss),
+                             "sec": sec_each})
+            loss = hist[-1]["loss"]
+            pending = []
+            int_t0 = None
+            int_data = 0.0
+            if at_ckpt:
                 engine.save(args.ckpt_dir, step + 1, state,
                             extra={"loss": loss})
                 from ..checkpoint import ckpt
@@ -232,7 +311,9 @@ def main(argv=None) -> int:
         "mean_step_s": mean_step,
         "tokens_per_s": tput,
         "breakdown_s": {"data": data_s, "step": step_s, "ckpt": ckpt_s},
+        "losses": [h["loss"] for h in hist],
         "predicted_wire_bytes": (plan_rec or {}).get("total_bytes"),
+        "drift": drift_rec,
         "pipeline": pipeline_rec,
     }
     if hist:
@@ -245,6 +326,24 @@ def main(argv=None) -> int:
               f"--steps {args.steps}")
     print(f"  breakdown  data {data_s:.2f}s | step {step_s:.2f}s | "
           f"ckpt {ckpt_s:.2f}s")
+
+    # registry sinks: step-time breakdown gauges (the train.step_s
+    # histogram was fed per measured interval in the loop), throughput,
+    # plus the solver memo-cache counters from the global registry
+    registry.gauge("train.tokens_per_s").set(tput)
+    registry.gauge("train.mean_step_s").set(mean_step)
+    registry.gauge("train.data_s").set(data_s)
+    registry.gauge("train.step_total_s").set(step_s)
+    registry.gauge("train.ckpt_s").set(ckpt_s)
+    for m in obs.default_registry().collect():
+        if m["name"].startswith("solver.") and m["type"] == "counter":
+            registry.counter(m["name"]).inc(m["value"])
+    if args.metrics_out:
+        registry.dump_jsonl(args.metrics_out)
+        print(f"metrics registry -> {args.metrics_out}")
+    if args.trace_out:
+        obs.export(args.trace_out)
+        print(f"trace -> {args.trace_out}")
 
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -1,0 +1,31 @@
+"""Unified telemetry subsystem (DESIGN.md §16): tracing, metrics, drift.
+
+Three pillars, zero dependencies beyond the stdlib (so `core/` and the
+launch CLIs can import it unconditionally):
+
+- ``obs.tracing``   — span API (`with obs.span("solver.dp"): ...`) that
+  exports Chrome/Perfetto trace-event JSON.  ~Free when disabled (the
+  default): one attribute check and a shared null context manager.
+- ``obs.metrics``   — a registry of counters / gauges / fixed-bucket
+  histograms with JSONL and Prometheus-text sinks (the single home for
+  TTFT/ITL histograms, step-time breakdowns, pool utilization, solver
+  memo-cache hit rate — replacing the ad-hoc percentile math that lived
+  in the launch CLIs).
+- ``obs.drift``     — the live counterpart of the verify calibration
+  bands: at engine start, solver-predicted wire bytes vs the compiled
+  program's collectives, emitted as the ``predicted_vs_measured_bytes``
+  gauge so every plan-sharded train/serve launch reports whether the
+  tiling it runs is still priced correctly.
+
+``python -m repro.obs`` summarizes / validates trace and metrics
+artifacts and renders a per-slot serving timeline as text.
+"""
+from . import drift, metrics, stats, tracing
+from .metrics import Registry, default_registry
+from .tracing import disable, enable, export, instant, span
+
+__all__ = [
+    "tracing", "metrics", "stats", "drift",
+    "span", "instant", "enable", "disable", "export",
+    "Registry", "default_registry",
+]

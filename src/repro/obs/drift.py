@@ -1,0 +1,94 @@
+"""Live cost-model drift: predicted wire bytes vs compiled-HLO bytes.
+
+The verify calibration cells (`repro.verify`, CONFORMANCE.md) check the
+solver's analytical wire-byte model against compiled HLO *offline*.
+This module is the always-on counterpart: at engine start a launch CLI
+hands it the plan's predicted system-wide wire bytes (the as-executed
+``solution_breakdown`` total stored in the plan record) and the compiled
+program's HLO text, and gets back gauges on the run's metrics registry:
+
+    drift.predicted_wire_bytes      solver prediction (system-wide)
+    drift.measured_wire_bytes       ring-model bytes from compiled HLO
+    drift.predicted_vs_measured_bytes   measured / predicted ratio
+
+The ratio uses the same orientation and is judged against the same band
+(``RATIO_LO``/``RATIO_HI``) as the CONFORMANCE calibration pass; both
+sides under ``ABS_FLOOR`` count as "no meaningful communication" and
+report ratio 1.0 so CI finiteness gates pass on tiny reduced configs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+from .metrics import Registry
+
+# Fallbacks if verify (which imports jax-heavy modules nowhere, but be
+# safe) cannot be imported; kept equal to verify/calibration.py.
+_RATIO_LO, _RATIO_HI, _ABS_FLOOR = 0.25, 4.0, 256e3
+
+
+def _band():
+    try:
+        from ..verify import calibration as cal
+        return cal.RATIO_LO, cal.RATIO_HI, cal.ABS_FLOOR
+    except Exception:
+        return _RATIO_LO, _RATIO_HI, _ABS_FLOOR
+
+
+def drift_ratio(predicted: float, measured: float,
+                floor: Optional[float] = None) -> float:
+    """measured/predicted with the calibration floor applied: both
+    sides under the floor → 1.0 (no meaningful communication either
+    way); predicted ~0 but measured real → +inf (a genuine miss that a
+    finiteness gate should catch)."""
+    if floor is None:
+        floor = _band()[2]
+    if predicted < floor and measured < floor:
+        return 1.0
+    if predicted <= 0.0:
+        return math.inf
+    return measured / predicted
+
+
+def record_drift(registry: Registry, predicted: float, hlo_text: str,
+                 n_devices: int,
+                 predicted_by_kind: Optional[Dict[str, float]] = None,
+                 ) -> Dict[str, Any]:
+    """Parse ``hlo_text`` collectives, set the drift gauges on
+    ``registry``, and return the full comparison record (what the launch
+    CLIs embed in their result JSON)."""
+    from ..analysis import hlo
+
+    stats = hlo.collect(hlo_text, n_devices)
+    measured = stats.wire_bytes_per_device * n_devices
+    lo, hi, floor = _band()
+    ratio = drift_ratio(predicted, measured, floor)
+    in_band = (lo <= ratio <= hi) if math.isfinite(ratio) else False
+
+    registry.gauge(
+        "drift.predicted_wire_bytes",
+        help="solver-predicted system-wide wire bytes").set(predicted)
+    registry.gauge(
+        "drift.measured_wire_bytes",
+        help="ring-model wire bytes parsed from compiled HLO").set(measured)
+    registry.gauge(
+        "drift.predicted_vs_measured_bytes",
+        help="measured/predicted wire-byte ratio (calibration band "
+             f"[{lo}, {hi}])").set(ratio)
+
+    rec: Dict[str, Any] = {
+        "predicted_wire_bytes": predicted,
+        "measured_wire_bytes": measured,
+        "ratio": ratio,
+        "in_band": in_band,
+        "band": [lo, hi],
+        "floor_bytes": floor,
+        "n_devices": n_devices,
+        "measured_by_kind": {k: v * n_devices
+                             for k, v in stats.wire_by_kind.items()},
+        "collective_counts": dict(stats.counts),
+    }
+    if predicted_by_kind:
+        rec["predicted_by_kind"] = dict(predicted_by_kind)
+    return rec

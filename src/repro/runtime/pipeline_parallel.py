@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..obs.tracing import span as _span
 from ..optim import adamw
 from ..optim.adamw import AdamWConfig, apply_updates
 
@@ -319,11 +320,12 @@ class PipelineTrainer:
             assert self._engine is not None, "call init() first"
             return self._engine.step(state, {"x": x, "y": y})
         fn = self._jit_step()
-        if self.mesh is not None:
-            from ..compat import use_mesh
-            with use_mesh(self.mesh):
-                return fn(state, x, y)
-        return fn(state, x, y)
+        with _span("train.pipeline_step", n_stages=self.n_stages):
+            if self.mesh is not None:
+                from ..compat import use_mesh
+                with use_mesh(self.mesh):
+                    return fn(state, x, y)
+            return fn(state, x, y)
 
     def lower_step(self, state_like, x_like, y_like):
         """Lower+compile the pipelined step on stand-ins — the verify

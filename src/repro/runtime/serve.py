@@ -64,6 +64,8 @@ import numpy as np
 
 from ..compat import use_mesh
 from ..models.model import LM, paged_ok
+from ..obs import metrics as _metrics
+from ..obs.tracing import instant as _instant, span as _span
 from .paged import BlockPool, NoFreeBlocks, PrefixTrie
 
 PyTree = Any
@@ -154,8 +156,22 @@ class Server:
     """
 
     def __init__(self, model: LM, params: PyTree, scfg: ServeConfig,
-                 mesh=None):
+                 mesh=None, registry: Optional[_metrics.Registry] = None):
         self.scfg = scfg
+        # scheduler-side metrics; None -> shared no-op instruments, so
+        # an unobserved server (warm-up, tests) records nothing
+        reg = registry if registry is not None else _metrics.NULL
+        self.registry = registry
+        self._m_tokens = reg.counter(
+            "serve.tokens", help="tokens emitted across all requests")
+        self._m_preempt = reg.counter(
+            "serve.preemptions", help="slot preemptions")
+        self._m_prefix_hits = reg.counter(
+            "serve.prompt_cache_hits",
+            help="prompt tokens served from the prefix trie")
+        self._m_pool_util = reg.gauge(
+            "serve.block_pool_utilization",
+            help="fraction of KV pool blocks in use (post-dispatch)")
         self.mesh = mesh if mesh is not None else model.mesh
         self.plan = model.plan
         n = scfg.slots
@@ -403,6 +419,12 @@ class Server:
 
     def _admit(self, req: Request, slot: int,
                method: str = "chunked") -> List[Tuple]:
+        with _span("serve.admit", rid=req.rid, slot=slot,
+                   prompt_len=len(req.prompt)):
+            return self._admit_impl(req, slot, method)
+
+    def _admit_impl(self, req: Request, slot: int,
+                    method: str) -> List[Tuple]:
         scfg = self.scfg
         if not 1 <= len(req.prompt) <= scfg.max_len:
             raise ValueError(
@@ -415,6 +437,10 @@ class Server:
                                          resume_tail=req.prior_out)
         else:
             logits = self._prefill_linear(prompt, slot, method)
+        if req.prior_out:
+            _instant("serve.resume", rid=req.rid, slot=slot)
+        else:
+            _instant("serve.admitted", rid=req.rid, slot=slot)
         with self._ctx():
             tok = int(self._sample1(logits, req.rid, req.prior_out))
         self.prefill_logits[slot] = np.asarray(logits)
@@ -437,7 +463,8 @@ class Server:
     def _prefill_linear(self, prompt: np.ndarray, slot: int,
                         method: str):
         c = self.scfg.prefill_chunk if method == "chunked" else 1
-        with self._ctx():
+        with _span("serve.prefill", slot=slot,
+                   tokens=len(prompt)), self._ctx():
             self.cache = self._reset(self.cache, slot)
             logits = None
             for i in range(0, len(prompt), c):
@@ -454,6 +481,12 @@ class Server:
     # -- paged admission: trie match + CoW + suffix prefill ---------------
     def _prefill_paged(self, prompt: np.ndarray, slot: int,
                        method: str, resume_tail: int = 0):
+        with _span("serve.prefill", slot=slot, tokens=len(prompt)):
+            return self._prefill_paged_impl(prompt, slot, method,
+                                            resume_tail)
+
+    def _prefill_paged_impl(self, prompt: np.ndarray, slot: int,
+                            method: str, resume_tail: int = 0):
         """Build the slot's block-table row — re-linking trie-cached
         prefix blocks, copy-on-write for a partial block match, fresh
         blocks for the suffix — then prefill only the unmatched suffix.
@@ -479,7 +512,10 @@ class Server:
             # at least one suffix token must remain to produce logits
             limit = p_len - 1
             if self.trie is not None:
-                full, part = self.trie.match(toks)
+                with _span("serve.trie_match", slot=slot) as sp:
+                    full, part = self.trie.match(toks)
+                    sp.set(full_blocks=len(full),
+                           partial=part is not None)
                 acquired += full
                 if part is not None:
                     acquired.append(part[0])
@@ -526,6 +562,7 @@ class Server:
         self._table_dirty = True
         self._pos_dirty = True
         self.prompt_cache_hits += cached
+        self._m_prefix_hits.inc(cached)
         c = scfg.prefill_chunk if method == "chunked" else 1
         # the decode-written tail of a resumed prompt must scan; the
         # original-prompt region keeps the configured impl, with chunks
@@ -606,6 +643,8 @@ class Server:
             rid, self._slot_prompt.get(slot, []) + outs,
             None if b >= _UNBOUNDED else b, prior_out=len(outs)))
         self.preemptions += 1
+        self._m_preempt.inc()
+        _instant("serve.preempt", rid=rid, slot=slot)
         self._events.append(("preempt", rid, slot))
 
     def _release_blocks(self, slot: int, rid: int) -> None:
@@ -645,6 +684,7 @@ class Server:
     def _append(self, slot: int, tok: int) -> List[Tuple]:
         rid = int(self.slot_rid[slot])
         self.outputs[rid].append(tok)
+        self._m_tokens.inc()
         self.n_out[slot] += 1
         self.next_tok[slot] = tok
         events: List[Tuple] = [("token", rid, tok)]
@@ -666,6 +706,7 @@ class Server:
         self.active[slot] = False
         self.slot_rid[slot] = -1
         self.finished[rid] = reason
+        _instant("serve.retire", rid=rid, slot=slot, reason=reason)
         return ("retire", rid, reason)
 
     # -- the serving loop -------------------------------------------------
@@ -718,7 +759,8 @@ class Server:
         self._flush_host_state()
         feed = (self.next_tok if forced_tokens is None
                 else np.asarray(forced_tokens, np.int32))
-        with self._ctx():
+        slots = [int(s) for s in np.nonzero(act)[0]]
+        with _span("serve.decode", slots=slots), self._ctx():
             toks, logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(feed),
                 jnp.asarray(self.slot_rid, jnp.int32),
@@ -729,11 +771,13 @@ class Server:
         # (tests, the conformance cell) pay the [slots, vocab] transfer
         self.last_logits = logits
         self.decode_dispatches += 1
+        if self.pool is not None:
+            self._m_pool_util.set(1.0 - self.pool.n_free / self.n_blocks)
         # only the rows that actually decoded advance (the seed server
         # advanced every slot, so an idle slot's mirror drifted)
         self.pos[act] += 1
-        for slot in np.nonzero(act)[0]:
-            events += self._append(int(slot), int(toks[slot]))
+        for slot in slots:
+            events += self._append(slot, int(toks[slot]))
         return events
 
     def spec_once(self) -> List[Tuple]:
@@ -761,25 +805,28 @@ class Server:
         self._flush_host_state()
         base_pos = self.pos.copy()
         base_out = self.n_out.copy()
+        slots = [int(s) for s in np.nonzero(act)[0]]
         with self._ctx():
-            toks, logits, self.cache = self._spec(
-                self.params, self.cache, jnp.asarray(self.next_tok),
-                jnp.asarray(self.slot_rid, jnp.int32),
-                jnp.asarray(self.n_out, jnp.int32),
-                jnp.asarray(act))
-            toks = np.asarray(toks)               # [K, B]
+            with _span("serve.draft", slots=slots, k=kk):
+                toks, logits, self.cache = self._spec(
+                    self.params, self.cache, jnp.asarray(self.next_tok),
+                    jnp.asarray(self.slot_rid, jnp.int32),
+                    jnp.asarray(self.n_out, jnp.int32),
+                    jnp.asarray(act))
+                toks = np.asarray(toks)           # [K, B]
             self.decode_dispatches += 1
             accept = np.full((self.scfg.slots,), kk, np.int64)
             if kk > 1 and self.scfg.spec_verify and self._can_verify:
                 # feed[j] is the token that produced draft token j
                 feed = np.concatenate([self.next_tok[None], toks[:-1]],
                                       axis=0)     # [K, B]
-                vt = np.asarray(self._verify(
-                    self.params, self.cache,
-                    jnp.asarray(feed.T.copy()),   # [B, K]
-                    jnp.asarray(base_pos.astype(np.int32)),
-                    jnp.asarray(self.slot_rid, jnp.int32),
-                    jnp.asarray(base_out.astype(np.int32))))
+                with _span("serve.verify", slots=slots, k=kk):
+                    vt = np.asarray(self._verify(
+                        self.params, self.cache,
+                        jnp.asarray(feed.T.copy()),   # [B, K]
+                        jnp.asarray(base_pos.astype(np.int32)),
+                        jnp.asarray(self.slot_rid, jnp.int32),
+                        jnp.asarray(base_out.astype(np.int32))))
                 self.verify_dispatches += 1
                 agree = vt.T == toks              # [K, B]
                 for s in range(self.scfg.slots):

@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict, List, Optional
 from ..checkpoint import ckpt
 from ..data.pipeline import BatchFeed, DataConfig
 from ..models.model import LM
+from ..obs.tracing import span as _span
 from ..optim.adamw import AdamWConfig
 from ..train.engine import EngineConfig, TrainEngine
 
@@ -94,7 +95,8 @@ def train(model: LM, dcfg: DataConfig, tcfg: TrainConfig,
             t0 = time.monotonic()
             batch = feed.get()
             state, metrics = engine.step(state, batch)
-            loss = float(metrics["loss"])
+            with _span("train.sync", step=step):
+                loss = float(metrics["loss"])
             dt = time.monotonic() - t0
             if (tcfg.straggler_timeout_s is not None
                     and dt > tcfg.straggler_timeout_s):

@@ -15,6 +15,7 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from ..core.plan import ShardingPlan
+from ..obs.tracing import span as _span
 from ..core.solver import (MeshAxis, TilingSolution, solution_breakdown,
                            solve_mesh)
 from .capture import Traced, capture
@@ -93,7 +94,11 @@ def autoshard(fn: Callable, mesh, *example_args,
                          **example_kwargs)
     if axes is None:
         axes = mesh_to_solver_axes(mesh)
-    sol = solve_mesh(traced.graph, axes, beam=beam, mem_scale=mem_scale)
+    with _span("autoshard.solve",
+               fn=name or getattr(fn, "__name__", "traced"),
+               tensors=len(traced.graph.tensors)):
+        sol = solve_mesh(traced.graph, axes, beam=beam,
+                         mem_scale=mem_scale)
     plan = ShardingPlan.from_solution(sol, traced.tensor_roles())
     predicted = solution_breakdown(traced.graph, sol.axes, sol.per_axis)
 

@@ -941,6 +941,17 @@ def capture(fn: Callable, *example_args, name: Optional[str] = None,
     in the solver's capacity accounting like builder weights)."""
     import jax
 
+    from ..obs.tracing import span as _span
+    with _span("trace.capture",
+               fn=name or getattr(fn, "__name__", "traced")):
+        return _capture_impl(fn, example_args, example_kwargs, name,
+                             weight_argnums)
+
+
+def _capture_impl(fn, example_args, example_kwargs, name,
+                  weight_argnums) -> Traced:
+    import jax
+
     flat, in_tree = jax.tree_util.tree_flatten(
         (example_args, example_kwargs))
     weight_leaf: List[bool] = []

@@ -39,6 +39,7 @@ from ..checkpoint import ckpt
 from ..compat import use_mesh
 from ..models.model import LM
 from ..models.sharding import batch_pspec, tree_pspecs
+from ..obs.tracing import span as _span
 from ..optim import adamw
 from ..optim.adamw import AdamWConfig, apply_updates
 from ..optim.compression import (bucket_slices, compress_bucketed,
@@ -330,10 +331,11 @@ class TrainEngine:
         or device arrays; with a mesh, feed committed device batches
         (data/pipeline.BatchFeed) to skip the transfer."""
         fn = self._jit_for(tuple(sorted(batch.keys())))
-        if self.mesh is not None:
-            with use_mesh(self.mesh):
-                return fn(state, batch)
-        return fn(state, batch)
+        with _span("train.step"):
+            if self.mesh is not None:
+                with use_mesh(self.mesh):
+                    return fn(state, batch)
+            return fn(state, batch)
 
     def lower_step(self, batch_like: Dict[str, Any]):
         """Lower+compile the step on ShapeDtypeStruct stand-ins (no
@@ -341,17 +343,20 @@ class TrainEngine:
         collectives against ``solution_breakdown`` through this."""
         fn = self._jit_for(tuple(sorted(batch_like.keys())))
         ctx = use_mesh(self.mesh) if self.mesh is not None else None
-        if ctx is not None:
-            with ctx:
-                return fn.lower(self.state_struct(), batch_like).compile()
-        return fn.lower(self.state_struct(), batch_like).compile()
+        with _span("train.lower_step"):
+            if ctx is not None:
+                with ctx:
+                    return fn.lower(self.state_struct(),
+                                    batch_like).compile()
+            return fn.lower(self.state_struct(), batch_like).compile()
 
     # ------------------------------------------------------------------
     # checkpointing (elastic)
     # ------------------------------------------------------------------
     def save(self, directory: str, step: int, state: PyTree,
              extra: Optional[Dict[str, Any]] = None) -> str:
-        return ckpt.save(directory, step, state, extra=extra)
+        with _span("train.ckpt_write", step=step):
+            return ckpt.save(directory, step, state, extra=extra)
 
     def restore(self, directory: str, step: Optional[int] = None
                 ) -> Optional[Tuple[PyTree, Dict[str, Any], int]]:

@@ -48,6 +48,10 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="experiments/conformance/"
                                      "CONFORMANCE.json",
                     help="report path ('' disables the file)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the verify "
+                         "run (one verify.cell span per cell, solver "
+                         "and compile spans nested inside)")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args(argv)
 
@@ -70,7 +74,10 @@ def main(argv=None) -> int:
 
     import jax
 
+    from .. import obs
     from ..compat import make_compat_mesh
+    if args.trace_out:
+        obs.enable(args.trace_out)
     t_start = time.time()
     report = {
         "meta": {
@@ -121,7 +128,8 @@ def main(argv=None) -> int:
         if with_serve:
             from .serve_cell import run_serve_cell
             t0 = time.time()
-            srec = run_serve_cell(mesh)
+            with obs.span("verify.cell", cell="serve", kind="serve"):
+                srec = run_serve_cell(mesh)
             report["serve"] = srec
             ok &= srec["status"] == "ok"
             if not args.json:
@@ -134,7 +142,8 @@ def main(argv=None) -> int:
         if with_serve_paged:
             from .serve_paged_cell import run_serve_paged_cell
             t0 = time.time()
-            sprec = run_serve_paged_cell(mesh)
+            with obs.span("verify.cell", cell="serve-paged", kind="serve"):
+                sprec = run_serve_paged_cell(mesh)
             report["serve_paged"] = sprec
             ok &= sprec["status"] == "ok"
             if not args.json:
@@ -149,7 +158,8 @@ def main(argv=None) -> int:
         if with_train:
             from .train_cell import run_train_cell
             t0 = time.time()
-            trec = run_train_cell(mesh, numerics=not args.no_numerics)
+            with obs.span("verify.cell", cell="train-engine", kind="train"):
+                trec = run_train_cell(mesh, numerics=not args.no_numerics)
             report["train_engine"] = trec
             ok &= trec["status"] == "ok"
             if not args.json:
@@ -164,7 +174,8 @@ def main(argv=None) -> int:
         if with_pipeline:
             from .pipeline_cell import run_pipeline_cell
             t0 = time.time()
-            prec = run_pipeline_cell(mesh)
+            with obs.span("verify.cell", cell="pipeline", kind="train"):
+                prec = run_pipeline_cell(mesh)
             report["pipeline"] = prec
             ok &= prec["status"] == "ok"
             if not args.json:
@@ -181,7 +192,8 @@ def main(argv=None) -> int:
         if with_compute:
             from .compute_cell import run_compute_cell
             t0 = time.time()
-            crec = run_compute_cell(mesh)
+            with obs.span("verify.cell", cell="compute", kind="calib"):
+                crec = run_compute_cell(mesh)
             report["compute"] = crec
             ok &= crec["status"] == "ok"
             if not args.json:
@@ -197,7 +209,8 @@ def main(argv=None) -> int:
         if with_trace:
             from .trace_cell import run_trace_cell
             t0 = time.time()
-            trec = run_trace_cell(mesh, numerics=not args.no_numerics)
+            with obs.span("verify.cell", cell="trace", kind="trace"):
+                trec = run_trace_cell(mesh, numerics=not args.no_numerics)
             report["trace"] = trec
             ok &= trec["status"] == "ok"
             if not args.json:
@@ -219,9 +232,10 @@ def main(argv=None) -> int:
             exec_mesh = make_compat_mesh((4,), ("fz",),
                                          devices=jax.devices()[:4])
         t0 = time.time()
-        fz = run_fuzz(args.fuzz, seed=args.fuzz_seed,
-                      exec_mesh=exec_mesh,
-                      exec_every=max(1, args.exec_every))
+        with obs.span("verify.fuzz", n=args.fuzz):
+            fz = run_fuzz(args.fuzz, seed=args.fuzz_seed,
+                          exec_mesh=exec_mesh,
+                          exec_every=max(1, args.exec_every))
         report["fuzz"] = fz.to_dict() | {"seconds": time.time() - t0}
         if not args.json:
             print(f"[{'ok' if fz.ok else 'FAIL'}] fuzz n={fz.n} "
@@ -249,6 +263,10 @@ def main(argv=None) -> int:
     if args.json:
         json.dump(report, sys.stdout, indent=1)
         print()
+    if args.trace_out:
+        obs.export(args.trace_out)
+        if not args.json:
+            print(f"trace -> {args.trace_out}", flush=True)
     if not args.json:
         print(f"verify: {'PASS' if ok else 'FAIL'} "
               f"({report['seconds']:.0f}s)", flush=True)

@@ -34,6 +34,7 @@ from ..core.solver import (MeshAxis, TilingSolution,
                            data_parallel_assignment, solution_breakdown,
                            solve_mesh)
 from ..core.tiling import Part, REPLICATE
+from ..obs.tracing import span as _span
 from .cells import CellSpec, MESH_AXES, MESH_SHAPE, N_DEVICES
 
 # declared calibration tolerance bands (DESIGN.md §9)
@@ -154,6 +155,13 @@ def run_cell(spec: CellSpec, mesh=None, *, numerics: bool = True,
     """Full conformance record for one cell.  ``mesh``: the verification
     mesh (created from MESH_SHAPE when omitted; requires the forced host
     device count — see __main__)."""
+    with _span("verify.cell", cell=spec.name, kind=spec.kind):
+        return _run_cell_impl(spec, mesh, numerics=numerics,
+                              baseline=baseline)
+
+
+def _run_cell_impl(spec: CellSpec, mesh=None, *, numerics: bool = True,
+                   baseline: bool = True) -> Dict[str, object]:
     import jax
 
     from ..compat import make_compat_mesh
