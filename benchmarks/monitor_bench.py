@@ -1,0 +1,156 @@
+"""Monitor-overhead benchmark: the PR-10 acceptance pairing.
+
+Every cell is a *pair*: the unobserved hot path (monitor detached,
+tracer disabled, ring detached — one attribute check per event) against
+the fully observed one (window percentiles + MAD-z + burn-rate rules,
+or ring-attached tracing).  The contract is that the unobserved column
+stays within noise of the pre-monitor (PR 9) cost, i.e. the monitor is
+free unless you turn it on.
+
+  PYTHONPATH=src python benchmarks/monitor_bench.py                # full
+  PYTHONPATH=src python benchmarks/monitor_bench.py --smoke        # CI
+  PYTHONPATH=src python benchmarks/monitor_bench.py --out BENCH_monitor.json
+
+Writes ``BENCH_monitor.json`` (cells keyed by ``name``/``kind``; the
+per-call costs are ``*_s`` so ``repro.obs regress`` treats them as
+lower-is-better).  Exit status is non-zero when the unobserved paths
+exceed ``--max-unobserved-ns``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import monitor, slo, tracing
+
+
+def _best_of(fn, n_calls: int, repeats: int = 5) -> float:
+    """Seconds per call, best of ``repeats`` timed loops (min filters
+    scheduler noise, the standard microbench reduction)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(n_calls)
+        best = min(best, (time.perf_counter() - t0) / n_calls)
+    return best
+
+
+def bench_guard_pair(n: int):
+    """The serve/train wiring: ``if self.monitor is not None: ...``."""
+    class Carrier:
+        __slots__ = ("monitor",)
+
+        def __init__(self, m):
+            self.monitor = m
+
+    off = Carrier(None)
+
+    def unobserved(k):
+        m = off.monitor
+        for _ in range(k):
+            if m is not None:
+                m.observe("itl", 0.01)
+
+    sl = slo.SLO(signal="itl", target=0.1)
+    on = Carrier(monitor.Monitor(slos=[sl]))
+
+    def observed(k):
+        m = on.monitor
+        for _ in range(k):
+            if m is not None:
+                m.observe("itl", 0.01)
+
+    return _best_of(unobserved, n), _best_of(observed, n)
+
+
+def bench_span_pair(n: int):
+    """Tracer hot path: disabled+ringless (``_active`` check) vs
+    ring-attached (the always-on flight-recorder sink)."""
+    t = tracing.get_tracer()
+    t.disable()
+    t.detach_ring()
+    t.clear()
+
+    def unobserved(k):
+        for _ in range(k):
+            with tracing.span("bench.step", i=1):
+                pass
+
+    off = _best_of(unobserved, n)
+    t.attach_ring(maxlen=2048)
+    on = _best_of(unobserved, n)
+    t.detach_ring()
+    t.clear()
+    return off, on
+
+
+def bench_instant_pair(n: int):
+    t = tracing.get_tracer()
+    t.disable()
+    t.detach_ring()
+    t.clear()
+
+    def unobserved(k):
+        for _ in range(k):
+            tracing.instant("bench.tick", i=1)
+
+    off = _best_of(unobserved, n)
+    t.attach_ring(maxlen=2048)
+    on = _best_of(unobserved, n)
+    t.detach_ring()
+    t.clear()
+    return off, on
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_monitor.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer calls per cell (CI)")
+    ap.add_argument("--max-unobserved-ns", type=float, default=2000.0,
+                    help="gate: unobserved per-call cost ceiling "
+                         "(generous — CI containers are noisy)")
+    args = ap.parse_args()
+    n = 20_000 if args.smoke else 200_000
+
+    cells = []
+    for name, fn in (("monitor_guard", bench_guard_pair),
+                     ("tracer_span", bench_span_pair),
+                     ("tracer_instant", bench_instant_pair)):
+        off_s, on_s = fn(n)
+        cells.append({
+            "name": name, "kind": "paired_overhead", "calls": n,
+            "unobserved_call_s": off_s,
+            "observed_call_s": on_s,
+            "observed_over_unobserved": on_s / max(off_s, 1e-12),
+        })
+        print(f"{name}: unobserved {off_s * 1e9:8.1f} ns/call | "
+              f"observed {on_s * 1e9:8.1f} ns/call "
+              f"({on_s / max(off_s, 1e-12):.1f}x)")
+
+    worst_off = max(c["unobserved_call_s"] for c in cells)
+    ok = worst_off * 1e9 <= args.max_unobserved_ns
+    doc = {
+        "meta": {"bench": "monitor_overhead", "calls": n,
+                 "smoke": bool(args.smoke)},
+        "cells": cells,
+        "summary": {"worst_unobserved_ns": worst_off * 1e9,
+                    "gate_ns": args.max_unobserved_ns, "pass": ok},
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"-> {args.out}  (worst unobserved "
+          f"{worst_off * 1e9:.1f} ns/call, gate "
+          f"{args.max_unobserved_ns:.0f} ns: {'pass' if ok else 'FAIL'})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

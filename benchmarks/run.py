@@ -187,7 +187,13 @@ def bench_kernels():
         "B2 S512 H4 P16 N16")
 
 
-def main() -> None:
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] == "regress":
+        # regression sentinel passthrough: diff a committed BENCH_*.json
+        # against a fresh run (see repro.obs.regress / DESIGN.md §17)
+        from repro.obs import regress
+        return regress.main(argv[1:])
     print("name,us_per_call,derived")
     bench_section22()
     bench_fig8_mlp()
@@ -196,7 +202,11 @@ def main() -> None:
     bench_solver_scaling()
     bench_kernels()
     bench_roofline()
+    print("# compare runs: python benchmarks/run.py regress "
+          "--baseline BENCH_solver.json --candidate <fresh.json>",
+          file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

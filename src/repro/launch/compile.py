@@ -119,6 +119,34 @@ def solve_cell_plan(cfg: ArchConfig, shape: ShapeConfig,
     return rec
 
 
+def solve_observed_regime(cfg: ArchConfig, axes: Sequence[MeshAxis],
+                          mesh_name: str, regime: str,
+                          batch: int, seq_len: int,
+                          use_cache: bool = True,
+                          graph_kwargs: Optional[Dict[str, Any]] = None,
+                          compute=None) -> Dict[str, Any]:
+    """Re-solve the cell plan under an *observed* regime — the replan
+    advisor's solver bridge (DESIGN.md §17).  ``regime`` maps to the
+    cell kind whose cost structure now dominates: a serving run that
+    turned decode-heavy is priced as a decode cell over the live slot
+    count and KV length, prefill-heavy as a prefill cell over the live
+    prompt shape, and training stays a train cell.  The mesh axes are
+    whatever survives (the caller passes the current runtime mesh), and
+    the record caches under a regime-suffixed name so advisories do not
+    thrash the on-disk plan cache."""
+    kind = {"decode-heavy": "decode", "prefill-heavy": "prefill",
+            "train": "train"}.get(regime)
+    if kind is None:
+        raise ValueError(
+            f"unknown regime {regime!r} (expected decode-heavy | "
+            f"prefill-heavy | train)")
+    shape = ShapeConfig(f"observed_{kind}_b{batch}_s{seq_len}",
+                        seq_len, batch, kind)
+    return solve_cell_plan(cfg, shape, axes, f"{mesh_name}_{regime}",
+                           use_cache=use_cache,
+                           graph_kwargs=graph_kwargs, compute=compute)
+
+
 def solve_plan(cfg: ArchConfig, shape: ShapeConfig, multi_pod: bool,
                use_cache: bool = True,
                capacity: bool = False) -> Dict[str, Any]:

@@ -81,13 +81,31 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--min-decode-tput", type=float, default=None,
                     help="exit non-zero unless decode tok/s exceeds this "
                          "(CI smoke gate)")
+    # continuous monitoring (DESIGN.md §17)
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT SLO target in ms (p95 objective; enables "
+                         "the continuous monitor)")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="inter-token-latency SLO target in ms (p95 "
+                         "objective; enables the continuous monitor)")
+    ap.add_argument("--flight-dir", default="flight",
+                    help="directory for flight-<trigger>.json dumps")
+    ap.add_argument("--inject-spike-ms", type=float, default=0.0,
+                    help="fault injection: sleep this long after each "
+                         "decode step in the injection window (drives "
+                         "the CI monitor-smoke breach)")
+    ap.add_argument("--inject-at", type=int, default=2,
+                    help="decode step the injection window starts at")
+    ap.add_argument("--inject-steps", type=int, default=20,
+                    help="injection window length in decode steps")
     return ap
 
 
-def run_workload(srv, arrivals, gen):
+def run_workload(srv, arrivals, gen, step_hook=None):
     """Drive the engine over (t_arrival, prompt) pairs; returns the
     metrics record.  Admission and decode are timed separately so the
-    prefill/decode split is honest."""
+    prefill/decode split is honest.  ``step_hook(n_decode_steps)`` runs
+    after each decode step — the fault-injection point."""
     t0 = time.monotonic()
     pending = sorted(arrivals, key=lambda a: a[0])
     submit_t = {}
@@ -124,6 +142,8 @@ def run_workload(srv, arrivals, gen):
         if dec_evs:
             decode_s += tc - tb
             n_decode_steps += 1
+            if step_hook is not None:
+                step_hook(n_decode_steps)
         # prefill-produced tokens are stamped at the end of admission,
         # not after the decode step that happened to follow them —
         # otherwise every TTFT carries one spurious pool decode
@@ -237,7 +257,48 @@ def main(argv=None) -> int:
                        block_len=args.block_len, n_blocks=args.n_blocks,
                        prefix_cache=not args.no_prefix_cache,
                        spec_k=args.spec_k)
-    srv = Server(model, params, scfg, mesh=mesh, registry=registry)
+
+    # continuous SLO monitor + flight recorder + replan advisor
+    # (DESIGN.md §17) — on when any SLO target or fault injection is
+    # requested; the unobserved engine pays one attribute check/token
+    monitor = recorder = advisor = None
+    slos = []
+    if args.slo_ttft_ms is not None:
+        slos.append(obs.SLO("ttft", target=args.slo_ttft_ms / 1e3))
+    if args.slo_itl_ms is not None:
+        slos.append(obs.SLO("itl", target=args.slo_itl_ms / 1e3))
+    if slos or args.inject_spike_ms:
+        recorder = obs.FlightRecorder(args.flight_dir,
+                                      registry=registry)
+        if args.plan == "auto" and plan_rec is not None:
+            from .compile import solve_observed_regime
+
+            def solve_fn(regime, _axes=axes):
+                # prefill-heavy is priced over the live prompt shape,
+                # decode-heavy over the slot pool at full KV length
+                s = (max(args.prompt_len, 8)
+                     if regime == "prefill-heavy" else args.max_len)
+                return solve_observed_regime(
+                    cfg, _axes, f"host{args.mesh}", regime,
+                    batch=args.slots, seq_len=s)
+
+            advisor = obs.ReplanAdvisor(solve_fn, plan_rec,
+                                        registry=registry)
+        monitor = obs.Monitor(slos=slos, registry=registry,
+                              recorder=recorder, advisor=advisor)
+
+    srv = Server(model, params, scfg, mesh=mesh, registry=registry,
+                 monitor=monitor)
+
+    if monitor is not None:
+        # decode- vs prefill-heavy from the live emitted/prompt token
+        # mix (this harness admits uniform prompt_len prompts)
+        def regime_fn():
+            gen = sum(len(v) for v in srv.outputs.values())
+            pro = max(1, len(srv.outputs) * args.prompt_len)
+            return "decode-heavy" if gen >= pro else "prefill-heavy"
+
+        monitor.regime_fn = regime_fn
 
     # live mini-calibration (DESIGN.md §16): the plan's as-executed
     # predicted wire bytes vs the compiled decode cell's collectives —
@@ -269,6 +330,9 @@ def main(argv=None) -> int:
                   f"(band {drift_rec['band']}, "
                   f"{'in' if drift_rec['in_band'] else 'OUT OF'} band; "
                   f"{time.time() - t0:.1f}s compile)")
+            if monitor is not None:
+                monitor.check_drift(drift_rec["ratio"],
+                                    band=tuple(drift_rec["band"]))
 
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or args.slots
@@ -287,7 +351,19 @@ def main(argv=None) -> int:
     srv.adopt_jits(warm)
     del warm          # free its param copy + pool cache before measuring
 
-    rec = run_workload(srv, list(zip(t_arr, prompts)), args.gen)
+    step_hook = None
+    if args.inject_spike_ms:
+        lo, hi = args.inject_at, args.inject_at + args.inject_steps
+
+        def step_hook(n):
+            if lo <= n < hi:
+                time.sleep(args.inject_spike_ms / 1e3)
+
+        print(f"injecting {args.inject_spike_ms:.0f}ms stalls into "
+              f"decode steps [{lo}, {hi})")
+
+    rec = run_workload(srv, list(zip(t_arr, prompts)), args.gen,
+                       step_hook=step_hook)
     rec["meta"] = {
         "arch": cfg.name, "reduced": args.reduced, "slots": args.slots,
         "max_len": args.max_len, "gen": args.gen,
@@ -326,6 +402,26 @@ def main(argv=None) -> int:
     for m in obs.default_registry().collect():
         if m["name"].startswith("solver.") and m["type"] == "counter":
             registry.counter(m["name"]).inc(m["value"])
+    if monitor is not None:
+        monitor.export_gauges()
+        rec["monitor"] = monitor.snapshot()
+        rec["monitor"]["flight_dumps"] = recorder.dumps
+        rec["monitor"]["advice"] = advisor.advice if advisor else []
+        n_breach = sum(1 for e in monitor.events
+                       if e["type"] == "slo_breach")
+        print(f"monitor: {monitor.n_events} event(s) "
+              f"({n_breach} SLO breach obs), "
+              f"{len(recorder.dumps)} flight record(s)"
+              + "".join(f"\n  flight -> {p}" for p in recorder.dumps))
+        for a in (advisor.advice if advisor else []):
+            win = a.get("modeled_win")
+            print(f"  replan advice [{a['trigger']}/{a['regime']}]: "
+                  + (f"error {a['error']}" if "error" in a else
+                     f"modeled step {a['current_step_s']:.3g}s -> "
+                     f"{a['advised_step_s']:.3g}s "
+                     f"(win {win:+.1%}, plan "
+                     f"{'changed' if a['plan_changed'] else 'unchanged'})"))
+        recorder.close()
     if args.metrics_out:
         registry.dump_jsonl(args.metrics_out)
         print(f"metrics registry -> {args.metrics_out}")

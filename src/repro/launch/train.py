@@ -75,6 +75,20 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--min-step-tput", type=float, default=None,
                     help="exit non-zero unless steady-state tokens/s "
                          "exceeds this (CI smoke gate)")
+    # continuous monitoring (DESIGN.md §17)
+    ap.add_argument("--slo-step-ms", type=float, default=None,
+                    help="per-step wall-time SLO target in ms (p95 "
+                         "objective; enables the continuous monitor — "
+                         "use --log-every 1 for per-step granularity)")
+    ap.add_argument("--flight-dir", default="flight",
+                    help="directory for flight-<trigger>.json dumps")
+    ap.add_argument("--inject-spike-ms", type=float, default=0.0,
+                    help="fault injection: stall this long after the "
+                         "step dispatch in the injection window")
+    ap.add_argument("--inject-at", type=int, default=4,
+                    help="step the injection window starts at")
+    ap.add_argument("--inject-steps", type=int, default=20,
+                    help="injection window length in steps")
     return ap
 
 
@@ -190,6 +204,33 @@ def main(argv=None) -> int:
                                        total_steps=args.steps)),
         mesh=mesh)
 
+    # continuous SLO monitor + flight recorder + replan advisor
+    # (DESIGN.md §17) — on when a step SLO or fault injection is
+    # requested; the unobserved loop pays one attribute check per step
+    monitor = recorder = advisor = None
+    slos = []
+    if args.slo_step_ms is not None:
+        slos.append(obs.SLO("step", target=args.slo_step_ms / 1e3))
+    if slos or args.inject_spike_ms:
+        recorder = obs.FlightRecorder(args.flight_dir,
+                                      registry=registry)
+        if args.plan == "auto" and plan_rec is not None:
+            from .compile import solve_observed_regime
+
+            def solve_fn(regime, _axes=axes, _flags=flags):
+                return solve_observed_regime(
+                    cfg, _axes, f"host{args.mesh}{_flags}", regime,
+                    batch=args.batch, seq_len=args.seq,
+                    graph_kwargs={
+                        "master_fp32": master_fp32,
+                        "error_feedback": args.grad_compression})
+
+            advisor = obs.ReplanAdvisor(solve_fn, plan_rec,
+                                        registry=registry)
+        monitor = obs.Monitor(slos=slos, registry=registry,
+                              recorder=recorder, advisor=advisor,
+                              regime_fn=lambda: "train")
+
     state = None
     start = 0
     if args.ckpt_dir:
@@ -227,6 +268,9 @@ def main(argv=None) -> int:
                   f"(band {drift_rec['band']}, "
                   f"{'in' if drift_rec['in_band'] else 'OUT OF'} band; "
                   f"{time.time() - t0:.1f}s compile)")
+            if monitor is not None:
+                monitor.check_drift(drift_rec["ratio"],
+                                    band=tuple(drift_rec["band"]))
 
     dcfg = DataConfig(seed=args.seed, vocab=cfg.vocab, seq_len=args.seq,
                       global_batch=args.batch)
@@ -256,6 +300,10 @@ def main(argv=None) -> int:
             tb = time.monotonic()
             int_data += tb - ta
             state, metrics = engine.step(state, batch)
+            if (args.inject_spike_ms
+                    and args.inject_at <= step - start
+                    < args.inject_at + args.inject_steps):
+                time.sleep(args.inject_spike_ms / 1e3)
             pending.append((step, metrics["loss"]))
 
             at_ckpt = (args.ckpt_dir
@@ -265,12 +313,21 @@ def main(argv=None) -> int:
                      or step == args.steps - 1 or at_ckpt)
             if not flush:
                 continue
+            ts0 = time.monotonic()
             with obs.span("train.sync", steps=len(pending)):
                 jax.block_until_ready(pending[-1][1])
             tc = time.monotonic()
             int_wall = tc - int_t0
             sec_each = int_wall / len(pending)
             measured = pending[0][0] - start >= warmup
+            if monitor is not None and measured:
+                # per-step wall time (exact per step at --log-every 1),
+                # amortized data wait, and the device-sync straggler
+                # signal — the streams the burn-rate and MAD-z rules run
+                for _ in pending:
+                    monitor.observe("step", sec_each)
+                monitor.observe("data_wait", int_data / len(pending))
+                monitor.observe("sync", tc - ts0)
             if measured:
                 data_s += int_data
                 step_s += int_wall - int_data
@@ -326,6 +383,29 @@ def main(argv=None) -> int:
               f"--steps {args.steps}")
     print(f"  breakdown  data {data_s:.2f}s | step {step_s:.2f}s | "
           f"ckpt {ckpt_s:.2f}s")
+
+    if monitor is not None:
+        monitor.export_gauges()
+        rec["monitor"] = monitor.snapshot()
+        rec["monitor"]["flight_dumps"] = recorder.dumps if recorder else []
+        rec["monitor"]["advice"] = advisor.advice if advisor else []
+        n_breach = sum(1 for e in monitor.events
+                       if e["type"] == "slo_breach")
+        print(f"  monitor: {monitor.n_events} event(s) "
+              f"({n_breach} SLO breach obs), "
+              f"{len(rec['monitor']['flight_dumps'])} flight dump(s)")
+        for a in rec["monitor"]["advice"]:
+            if "error" in a:
+                print(f"  replan advice [{a['trigger']}/{a['regime']}]: "
+                      f"solve failed: {a['error']}")
+                continue
+            print(f"  replan advice [{a['trigger']}/{a['regime']}]: "
+                  f"modeled step {a['current_step_s']:.2e}s -> "
+                  f"{a['advised_step_s']:.2e}s "
+                  f"(win {a['modeled_win'] * 100:+.1f}%, "
+                  f"{'plan changed' if a['plan_changed'] else 'same plan'})")
+        if recorder is not None:
+            recorder.close()
 
     # registry sinks: step-time breakdown gauges (the train.step_s
     # histogram was fed per measured interval in the loop), throughput,

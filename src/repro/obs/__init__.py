@@ -17,15 +17,33 @@ launch CLIs can import it unconditionally):
   gauge so every plan-sharded train/serve launch reports whether the
   tiling it runs is still priced correctly.
 
-``python -m repro.obs`` summarizes / validates trace and metrics
-artifacts and renders a per-slot serving timeline as text.
+PR 10 adds the continuous half (DESIGN.md §17):
+
+- ``obs.slo``      — SLO objectives + multi-window burn-rate rules.
+- ``obs.monitor``  — streaming percentile estimators (exact window ring
+  + P² fallback), MAD-z anomaly scoring, the :class:`Monitor` facade,
+  and the drift/SLO-triggered :class:`ReplanAdvisor`.
+- ``obs.flight``   — always-on bounded ring of recent trace events,
+  dumped as a Perfetto-compatible ``flight-<trigger>.json`` (with a
+  metrics snapshot) the moment something goes wrong.
+- ``obs.regress``  — the bench-regression sentinel behind
+  ``python -m repro.obs regress``.
+
+``python -m repro.obs`` summarizes / validates trace, metrics and
+flight artifacts, renders a per-slot serving timeline as text, and
+runs the regression sentinel.
 """
-from . import drift, metrics, stats, tracing
+from . import drift, flight, metrics, monitor, regress, slo, stats, tracing
+from .flight import FlightRecorder
 from .metrics import Registry, default_registry
+from .monitor import Monitor, ReplanAdvisor
+from .slo import SLO
 from .tracing import disable, enable, export, instant, span
 
 __all__ = [
     "tracing", "metrics", "stats", "drift",
+    "slo", "monitor", "flight", "regress",
     "span", "instant", "enable", "disable", "export",
     "Registry", "default_registry",
+    "SLO", "Monitor", "ReplanAdvisor", "FlightRecorder",
 ]

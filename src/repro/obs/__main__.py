@@ -1,4 +1,18 @@
-"""Trace/metrics artifact tooling: summarize, validate, timeline.
+"""Trace/metrics/flight artifact tooling: validate, summarize,
+timeline, regress.
+
+Subcommand interface (file type is sniffed — ``.jsonl`` = metrics,
+JSON with a top-level ``"flight"`` block = flight record, otherwise
+Chrome trace):
+
+    python -m repro.obs validate run.trace.json run.metrics.jsonl
+    python -m repro.obs validate flight-*.json            # flight records
+    python -m repro.obs summarize run.trace.json
+    python -m repro.obs timeline serve.trace.json
+    python -m repro.obs regress --baseline BENCH_solver.json \\
+        --candidate /tmp/BENCH_solver_smoke.json [--report-only]
+
+The original flag interface is kept for compatibility:
 
     python -m repro.obs --trace run.trace.json                 # summary
     python -m repro.obs --trace run.trace.json --validate      # schema gate
@@ -20,6 +34,7 @@ import sys
 from typing import Any, Dict, List
 
 from . import stats
+from .flight import validate_flight
 
 VALID_PH = {"X", "i", "I", "B", "E", "M", "C"}
 
@@ -231,8 +246,95 @@ def render_timeline(doc: Dict[str, Any], width: int = 100) -> str:
     return "\n".join(lines)
 
 
+# ------------------------------------------------------- subcommands --
+def _validate_file(path: str, require_drift: bool = False) -> List[str]:
+    """Sniff the artifact type and schema-check it; returns problems
+    prefixed with the path."""
+    if path.endswith(".jsonl"):
+        recs = load_metrics(path)
+        probs = [f"metrics: {e}" for e in validate_metrics(recs)]
+        if require_drift:
+            probs += [f"metrics: {e}" for e in check_drift(recs)]
+    else:
+        doc = load_trace(path)
+        if "flight" in doc:
+            probs = [f"flight: {e}" for e in validate_trace(doc)]
+            probs += [f"flight: {e}" for e in validate_flight(doc)]
+        else:
+            probs = [f"trace: {e}" for e in validate_trace(doc)]
+    return [f"{path}: {p}" for p in probs]
+
+
+def _cmd_validate(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs validate",
+        description="Schema-validate trace / metrics / flight-record "
+                    "artifacts (type sniffed per file).")
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--require-drift", action="store_true",
+                    help="fail unless metrics files contain a finite "
+                         "drift.predicted_vs_measured_bytes gauge")
+    args = ap.parse_args(argv)
+    problems: List[str] = []
+    for path in args.files:
+        problems += _validate_file(path, args.require_drift)
+    for p in problems:
+        print(f"INVALID: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print(f"OK: {len(args.files)} artifact(s) valid")
+    return 0
+
+
+def _cmd_summarize(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs summarize")
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+    for path in args.files:
+        doc = load_trace(path)
+        s = summarize_trace(doc)
+        if args.json:
+            print(json.dumps({path: s}, indent=2))
+            continue
+        print(f"== {path}")
+        fl = doc.get("flight")
+        if fl:
+            print(f"flight record: trigger={fl.get('trigger')!r} "
+                  f"seq={fl.get('seq')} "
+                  f"monitor_events={len(fl.get('monitor_events', []))} "
+                  f"metrics={len(fl.get('metrics', []))}")
+        print_trace_summary(s)
+    return 0
+
+
+def _cmd_timeline(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs timeline")
+    ap.add_argument("file")
+    ap.add_argument("--width", type=int, default=100)
+    args = ap.parse_args(argv)
+    print(render_timeline(load_trace(args.file), args.width))
+    return 0
+
+
 # ----------------------------------------------------------------- cli --
 def main(argv=None) -> int:
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and not argv[0].startswith("-"):
+        cmd, rest = argv[0], list(argv[1:])
+        if cmd == "validate":
+            return _cmd_validate(rest)
+        if cmd == "summarize":
+            return _cmd_summarize(rest)
+        if cmd == "timeline":
+            return _cmd_timeline(rest)
+        if cmd == "regress":
+            from . import regress as _regress
+            return _regress.main(rest)
+        print(f"unknown subcommand {cmd!r} (expected validate | "
+              f"summarize | timeline | regress)", file=sys.stderr)
+        return 2
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)

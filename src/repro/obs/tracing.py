@@ -19,6 +19,14 @@ for every span, so spans line up with XLA ops inside a jax profiler
 capture.  jax is imported lazily and only then — this module itself
 stays stdlib-only.
 
+Besides the unbounded export list there is an optional bounded *ring*
+sink (``attach_ring``), which the flight recorder keeps attached for the
+whole run: the last N events are always available for a post-incident
+dump even when ``--trace-out`` was never passed.  The recording hot path
+checks a single ``_active`` attribute that folds together "export list
+enabled" and "ring attached", so the unobserved path stays exactly one
+attribute check regardless of how many sinks exist.
+
 Thread-safe: events carry the recording thread's id (Perfetto lays
 threads out as separate tracks) and the event list is appended under a
 lock.
@@ -26,6 +34,7 @@ lock.
 from __future__ import annotations
 
 import atexit
+import collections
 import json
 import os
 import threading
@@ -96,6 +105,11 @@ class Tracer:
         self.enabled = False
         self.annotate = False
         self.out: Optional[str] = None
+        # bounded always-on sink for the flight recorder; None unless
+        # attached.  _active = enabled OR ring attached — the single
+        # attribute the hot path checks.
+        self.ring: Optional[collections.deque] = None
+        self._active = False
         # perf_counter epoch so ts starts near 0 (Perfetto dislikes
         # huge absolute timestamps)
         self._epoch = time.perf_counter()
@@ -103,12 +117,12 @@ class Tracer:
 
     # -- recording --------------------------------------------------------
     def span(self, name: str, attrs: Optional[Dict[str, Any]] = None):
-        if not self.enabled:
+        if not self._active:
             return NULL_SPAN
         return _Span(self, name, attrs)
 
     def instant(self, name: str, **attrs) -> None:
-        if not self.enabled:
+        if not self._active:
             return
         ts = (time.perf_counter() - self._epoch) * 1e6
         ev = {"name": name, "cat": name.split(".")[0], "ph": "i",
@@ -117,7 +131,10 @@ class Tracer:
         if attrs:
             ev["args"] = attrs
         with self._lock:
-            self.events.append(ev)
+            if self.enabled:
+                self.events.append(ev)
+            if self.ring is not None:
+                self.ring.append(ev)
 
     def _record(self, name: str, t0: float, t1: float,
                 attrs: Optional[Dict[str, Any]]) -> None:
@@ -128,19 +145,41 @@ class Tracer:
         if attrs:
             ev["args"] = attrs
         with self._lock:
-            self.events.append(ev)
+            if self.enabled:
+                self.events.append(ev)
+            if self.ring is not None:
+                self.ring.append(ev)
 
     # -- lifecycle --------------------------------------------------------
+    def _refresh_active(self) -> None:
+        self._active = self.enabled or self.ring is not None
+
     def enable(self, out: Optional[str] = None,
                annotate: bool = False) -> None:
         self.enabled = True
         self.annotate = annotate
         if out is not None:
             self.out = out
+        self._refresh_active()
 
     def disable(self) -> None:
         self.enabled = False
         self.annotate = False
+        self._refresh_active()
+
+    def attach_ring(self, maxlen: int = 2048) -> collections.deque:
+        """Attach (or resize) the bounded always-on sink; returns the
+        deque the flight recorder snapshots at dump time."""
+        with self._lock:
+            old = list(self.ring) if self.ring is not None else []
+            self.ring = collections.deque(old, maxlen=maxlen)
+        self._refresh_active()
+        return self.ring
+
+    def detach_ring(self) -> None:
+        with self._lock:
+            self.ring = None
+        self._refresh_active()
 
     def clear(self) -> None:
         with self._lock:
@@ -174,10 +213,10 @@ def get_tracer() -> Tracer:
 
 def span(name: str, **attrs):
     """The hot-path entry point: a context manager timing ``name``.
-    While tracing is disabled this is one attribute check and returns
+    While no sink is active this is one attribute check and returns
     the shared :data:`NULL_SPAN` (nothing is recorded or kept)."""
     t = _TRACER
-    if not t.enabled:
+    if not t._active:
         return NULL_SPAN
     return _Span(t, name, attrs or None)
 
@@ -185,7 +224,7 @@ def span(name: str, **attrs):
 def instant(name: str, **attrs) -> None:
     """Record a point event (preemption, retirement, ...)."""
     t = _TRACER
-    if t.enabled:
+    if t._active:
         t.instant(name, **attrs)
 
 
@@ -193,7 +232,7 @@ def record(name: str, t0: float, t1: float, **attrs) -> None:
     """Record an already-measured interval; ``t0``/``t1`` must be
     ``time.perf_counter()`` readings (the tracer's clock)."""
     t = _TRACER
-    if t.enabled:
+    if t._active:
         t._record(name, t0, t1, attrs or None)
 
 

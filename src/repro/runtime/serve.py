@@ -56,6 +56,7 @@ import collections
 import contextlib
 import dataclasses
 import itertools
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -156,12 +157,18 @@ class Server:
     """
 
     def __init__(self, model: LM, params: PyTree, scfg: ServeConfig,
-                 mesh=None, registry: Optional[_metrics.Registry] = None):
+                 mesh=None, registry: Optional[_metrics.Registry] = None,
+                 monitor=None):
         self.scfg = scfg
         # scheduler-side metrics; None -> shared no-op instruments, so
         # an unobserved server (warm-up, tests) records nothing
         reg = registry if registry is not None else _metrics.NULL
         self.registry = registry
+        # continuous SLO/anomaly monitor (obs.monitor.Monitor); when
+        # None the token hot path pays exactly one attribute check
+        self.monitor = monitor
+        self._t_submit: Dict[int, float] = {}   # rid -> submit time
+        self._t_last: Dict[int, float] = {}     # rid -> last token time
         self._m_tokens = reg.counter(
             "serve.tokens", help="tokens emitted across all requests")
         self._m_preempt = reg.counter(
@@ -401,6 +408,8 @@ class Server:
         rid = self._next_rid
         self._next_rid += 1
         self.waiting.append(Request(rid, list(prompt), max_new_tokens))
+        if self.monitor is not None:
+            self._t_submit[rid] = time.perf_counter()
         return rid
 
     def admit(self, prompt: Sequence[int], slot: int,
@@ -644,6 +653,8 @@ class Server:
             None if b >= _UNBOUNDED else b, prior_out=len(outs)))
         self.preemptions += 1
         self._m_preempt.inc()
+        if self.monitor is not None:
+            self.monitor.bump("preempt")
         _instant("serve.preempt", rid=rid, slot=slot)
         self._events.append(("preempt", rid, slot))
 
@@ -681,10 +692,26 @@ class Server:
             self._table_dirty = True
 
     # -- slot bookkeeping -------------------------------------------------
+    def _observe_token(self, rid: int) -> None:
+        """Feed the monitor one emitted token: first token since submit
+        is TTFT, every later one an ITL.  A preemption gap lands in the
+        ITL stream — that is what the client experiences."""
+        now = time.perf_counter()
+        last = self._t_last.get(rid)
+        if last is None:
+            t0 = self._t_submit.pop(rid, None)
+            if t0 is not None:
+                self.monitor.observe("ttft", now - t0)
+        else:
+            self.monitor.observe("itl", now - last)
+        self._t_last[rid] = now
+
     def _append(self, slot: int, tok: int) -> List[Tuple]:
         rid = int(self.slot_rid[slot])
         self.outputs[rid].append(tok)
         self._m_tokens.inc()
+        if self.monitor is not None:
+            self._observe_token(rid)
         self.n_out[slot] += 1
         self.next_tok[slot] = tok
         events: List[Tuple] = [("token", rid, tok)]
@@ -706,6 +733,8 @@ class Server:
         self.active[slot] = False
         self.slot_rid[slot] = -1
         self.finished[rid] = reason
+        self._t_last.pop(rid, None)
+        self._t_submit.pop(rid, None)
         _instant("serve.retire", rid=rid, slot=slot, reason=reason)
         return ("retire", rid, reason)
 
@@ -716,6 +745,8 @@ class Server:
         pool is transiently full; admission order is preserved) or
         retired with reason "rejected" (invalid request) — never
         silently dropped."""
+        if self.monitor is not None:
+            self.monitor.observe("queue_depth", float(len(self.waiting)))
         events: List[Tuple] = []
         for slot in range(self.scfg.slots):
             if not self.waiting:

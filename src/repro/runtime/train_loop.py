@@ -63,8 +63,16 @@ def train(model: LM, dcfg: DataConfig, tcfg: TrainConfig,
           in_shardings=None,
           straggler_cb: Optional[Callable[[int, float], None]] = None,
           mesh=None,
+          monitor=None,
+          step_hook: Optional[Callable[[int], None]] = None,
           ) -> Dict[str, Any]:
-    """Run (or resume) training.  Returns history + final state."""
+    """Run (or resume) training.  Returns history + final state.
+
+    ``monitor`` (obs.monitor.Monitor) observes per-step wall time,
+    data-pipeline wait, and device-sync time — the signals the SLO
+    burn-rate and MAD-z straggler rules run on.  ``step_hook(step)``
+    runs inside the timed region right after the step dispatch (the
+    launch CLI's fault-injection point)."""
     import jax
 
     engine = make_engine(model, tcfg, mesh=mesh)
@@ -94,10 +102,19 @@ def train(model: LM, dcfg: DataConfig, tcfg: TrainConfig,
         for step in range(start, tcfg.steps):
             t0 = time.monotonic()
             batch = feed.get()
+            t_data = time.monotonic() - t0
             state, metrics = engine.step(state, batch)
+            if step_hook is not None:
+                step_hook(step)
+            t_s0 = time.monotonic()
             with _span("train.sync", step=step):
                 loss = float(metrics["loss"])
+            t_sync = time.monotonic() - t_s0
             dt = time.monotonic() - t0
+            if monitor is not None:
+                monitor.observe("step", dt)
+                monitor.observe("data_wait", t_data)
+                monitor.observe("sync", t_sync)
             if (tcfg.straggler_timeout_s is not None
                     and dt > tcfg.straggler_timeout_s):
                 if straggler_cb is not None:

@@ -89,6 +89,9 @@ class TrainEngine:
         self.model = model
         self.mesh = mesh if mesh is not None else model.mesh
         self.plan = model.plan
+        # continuous monitor (obs.monitor.Monitor), attached by the
+        # harness; None costs one attribute check per step dispatch
+        self.monitor = None
         self._jit = None
         self._jit_keys: Optional[Tuple[str, ...]] = None
         self._struct: Optional[PyTree] = None
@@ -331,11 +334,24 @@ class TrainEngine:
         or device arrays; with a mesh, feed committed device batches
         (data/pipeline.BatchFeed) to skip the transfer."""
         fn = self._jit_for(tuple(sorted(batch.keys())))
+        if self.monitor is None:
+            with _span("train.step"):
+                if self.mesh is not None:
+                    with use_mesh(self.mesh):
+                        return fn(state, batch)
+                return fn(state, batch)
+        import time
+        t0 = time.monotonic()
         with _span("train.step"):
             if self.mesh is not None:
                 with use_mesh(self.mesh):
-                    return fn(state, batch)
-            return fn(state, batch)
+                    out = fn(state, batch)
+            else:
+                out = fn(state, batch)
+        # host time to enqueue the step: blocks when the dispatch queue
+        # backs up, so sustained growth tracks device step time
+        self.monitor.observe("dispatch", time.monotonic() - t0)
+        return out
 
     def lower_step(self, batch_like: Dict[str, Any]):
         """Lower+compile the step on ShapeDtypeStruct stand-ins (no

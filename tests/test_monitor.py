@@ -1,0 +1,358 @@
+"""PR 10 — continuous SLO monitor, flight recorder, replan advisor and
+regression sentinel (repro.obs.{monitor,slo,flight,regress}).
+
+Covers the streaming estimators' parity with the exact batch
+percentile (property-based over the integer strategies the hypothesis
+shim provides), the multi-window burn-rate semantics (sustained
+violation fires, a lone spike does not), MAD-z determinism replayed
+over the committed exemplar trace's span durations, the monitor ->
+recorder -> advisor event flow with fake clocks, flight-record schema
+validation, and the bench-diff direction rules.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.obs import flight, metrics, monitor, regress, slo, stats, tracing
+
+EXEMPLAR = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "experiments", "traces",
+                        "verify_dense_decode.trace.json")
+
+
+@pytest.fixture
+def ringless_tracer():
+    t = tracing.get_tracer()
+    t.clear()
+    t.detach_ring()
+    try:
+        yield t
+    finally:
+        t.disable()
+        t.detach_ring()
+        t.clear()
+
+
+# ------------------------------------------------- streaming estimators --
+
+class TestWindowPercentile:
+    def test_empty(self):
+        w = monitor.WindowPercentile()
+        assert w.percentile(50.0) is None
+        assert w.median() is None
+
+    @settings(max_examples=30)
+    @given(st.integers(1, 200), st.integers(0, 10_000))
+    def test_parity_with_exact(self, n, seed):
+        rng = random.Random(seed)
+        vals = [rng.randint(0, 1000) / 7.0 for _ in range(n)]
+        w = monitor.WindowPercentile(window=256)
+        for v in vals:
+            w.observe(v)
+        for q in (0.0, 25.0, 50.0, 95.0, 100.0):
+            assert w.percentile(q) == pytest.approx(
+                stats.percentile(vals, q), rel=1e-12)
+
+    @settings(max_examples=20)
+    @given(st.integers(8, 64), st.integers(0, 1000))
+    def test_window_evicts_oldest(self, win, seed):
+        rng = random.Random(seed)
+        vals = [float(rng.randint(0, 100)) for _ in range(win * 3)]
+        w = monitor.WindowPercentile(window=win)
+        for v in vals:
+            w.observe(v)
+        assert len(w.buf) == win          # ring evicted; .count is lifetime
+        assert w.count == len(vals)
+        assert w.percentile(50.0) == pytest.approx(
+            stats.percentile(vals[-win:], 50.0))
+
+
+class TestP2Quantile:
+    def test_exact_below_five_samples(self):
+        p = monitor.P2Quantile(50.0)
+        assert p.value() is None
+        for v in (3.0, 1.0, 2.0):
+            p.observe(v)
+        assert p.value() == stats.percentile([1.0, 2.0, 3.0], 50.0)
+
+    @settings(max_examples=15)
+    @given(st.integers(0, 10_000))
+    def test_within_tolerance_on_heavy_tail(self, seed):
+        # P^2 is an approximation: accept a few percent of the exact
+        # p95 on an exponential stream (the shape serving latencies take)
+        rng = random.Random(seed)
+        vals = [rng.expovariate(1.0) for _ in range(3000)]
+        p = monitor.P2Quantile(95.0)
+        for v in vals:
+            p.observe(v)
+        exact = stats.percentile(vals, 95.0)
+        assert p.value() == pytest.approx(exact, rel=0.08)
+
+    def test_rejects_bad_q(self):
+        # q is on [0, 100] like everywhere else in repro.obs
+        with pytest.raises(ValueError):
+            monitor.P2Quantile(-1.0)
+        with pytest.raises(ValueError):
+            monitor.P2Quantile(100.5)
+
+
+class TestMadZ:
+    def test_score_before_insert(self):
+        m = monitor.MadZ(window=32, min_samples=4)
+        for v in (1.0, 1.1, 0.9, 1.0, 1.05):
+            m.observe(v)
+        # a 100x spike scores huge; scoring must not be diluted by the
+        # spike itself joining the window first
+        assert m.score(100.0) > 50.0
+        assert m.observe(100.0) > 50.0
+
+    def test_constant_history_spike_is_inf(self):
+        m = monitor.MadZ(window=16, min_samples=4)
+        for _ in range(8):
+            m.observe(2.0)
+        assert m.score(3.0) == math.inf
+        assert m.score(2.0) == 0.0
+
+    def test_determinism_on_exemplar_trace(self):
+        # replay the committed exemplar's span durations twice: the
+        # anomaly scores must match bit-for-bit (no wall-clock, no RNG)
+        with open(EXEMPLAR) as f:
+            doc = json.load(f)
+        durs = [e["dur"] for e in doc["traceEvents"] if e.get("ph") == "X"]
+        assert len(durs) >= 8
+
+        def replay():
+            m = monitor.MadZ(window=8, min_samples=3)
+            return [m.observe(d) for d in durs]
+
+        a, b = replay(), replay()
+        assert a == b
+        assert any(math.isfinite(z) and z != 0.0 for z in a)
+
+
+# ------------------------------------------------------ burn-rate rules --
+
+def _slo(**kw):
+    base = dict(signal="itl", target=0.1, objective=0.95,
+                short_window=8, long_window=24, min_count=4)
+    base.update(kw)
+    return slo.SLO(**base)
+
+
+class TestBurnRate:
+    def test_lone_spike_does_not_fire(self):
+        rule = slo.BurnRateRule(_slo())
+        events = [rule.observe(0.01) for _ in range(20)]
+        assert all(e is None for e in events)
+        assert rule.observe(10.0) is None          # one bad sample
+        assert all(rule.observe(0.01) is None for _ in range(20))
+
+    def test_sustained_violation_fires_and_keeps_firing(self):
+        rule = slo.BurnRateRule(_slo())
+        for _ in range(24):
+            rule.observe(0.01)
+        fired = [rule.observe(10.0) for _ in range(24)]
+        breaches = [e for e in fired if e is not None]
+        assert breaches
+        b = breaches[0]
+        assert b["type"] == "slo_breach" and b["signal"] == "itl"
+        fast, slow = b["thresholds"]
+        assert b["burn_short"] >= fast
+        assert b["burn_long"] >= slow
+
+    def test_budget_and_validation(self):
+        assert _slo(objective=0.99).budget == pytest.approx(0.01)
+        with pytest.raises(ValueError):
+            _slo(objective=1.5)
+        with pytest.raises(ValueError):
+            _slo(target=-1.0)
+
+
+# ------------------------------------------------------ monitor -> flow --
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestMonitor:
+    def test_anomaly_event(self, ringless_tracer):
+        m = monitor.Monitor(anomaly_window=16, anomaly_z=8.0)
+        for _ in range(10):
+            assert m.observe("step", 0.1) == []
+        evs = m.observe("step", 50.0)
+        assert len(evs) == 1 and evs[0]["type"] == "anomaly"
+        assert evs[0]["madz"] >= 8.0 and math.isfinite(evs[0]["madz"])
+
+    def test_storm_and_drift(self, ringless_tracer):
+        clk = _FakeClock()
+        m = monitor.Monitor(storm_threshold=4, storm_window_s=10.0,
+                            clock=clk)
+        for i in range(3):
+            clk.t = float(i)
+            assert m.bump("preempt") == []
+        clk.t = 3.0
+        evs = m.bump("preempt")
+        assert evs and evs[0]["type"] == "preempt_storm"
+        assert m.check_drift(1.0) == []
+        blow = m.check_drift(9.0, band=(0.25, 4.0))
+        assert blow and blow[0]["type"] == "drift_blowout"
+
+    def test_breach_dumps_flight_and_advises(self, ringless_tracer,
+                                             tmp_path):
+        clk = _FakeClock()
+        reg = metrics.Registry()
+        rec = flight.FlightRecorder(str(tmp_path), registry=reg,
+                                    clock=clk)
+        advisor = monitor.ReplanAdvisor(
+            solve_fn=lambda regime: {"total_seconds": 0.5,
+                                     "role_cuts": {"model": 2},
+                                     "total_bytes": 1e6,
+                                     "solve_time": 0.01},
+            current={"total_seconds": 1.0, "role_cuts": {"model": 1},
+                     "total_bytes": 2e6},
+            registry=reg, clock=clk)
+        m = monitor.Monitor(slos=[_slo(signal="itl", target=0.1)],
+                            registry=reg, recorder=rec, advisor=advisor,
+                            regime_fn=lambda: "decode-heavy", clock=clk)
+        for _ in range(24):
+            m.observe("itl", 0.01)
+        evs = []
+        for _ in range(24):
+            evs += m.observe("itl", 5.0)
+        breaches = [e for e in evs if e["type"] == "slo_breach"]
+        assert breaches
+        first = breaches[0]
+        assert os.path.exists(first["flight"])
+        with open(first["flight"]) as f:
+            doc = json.load(f)
+        assert flight.validate_flight(doc) == []
+        assert doc["flight"]["trigger"].startswith("slo_breach")
+        assert doc["traceEvents"]           # ring captured the instants
+        # the very first trigger (the spike also scores as an anomaly)
+        # got the one advisory the cooldown allows
+        advised = [e for e in evs if "advice" in e]
+        assert len(advised) == 1
+        adv = advised[0]["advice"]
+        assert adv["modeled_win"] == pytest.approx(0.5)
+        assert adv["plan_changed"] is True
+        assert adv["regime"] == "decode-heavy"
+        # cooldown: the advisor fired once, not once per breach obs
+        assert len(advisor.advice) == 1
+        assert reg.counter("monitor.slo_breach_total").value >= 1
+        rec.close()
+
+    def test_advisor_survives_solver_failure(self, ringless_tracer):
+        def boom(_regime):
+            raise RuntimeError("mesh gone")
+        adv = monitor.ReplanAdvisor(boom, current={}, clock=_FakeClock())
+        ev = adv.advise("slo_breach", "train")
+        assert ev["type"] == "replan_advice" and "mesh gone" in ev["error"]
+
+    def test_snapshot_and_gauges(self, ringless_tracer):
+        reg = metrics.Registry()
+        m = monitor.Monitor(registry=reg)
+        for v in (0.1, 0.2, 0.3):
+            m.observe("step", v)
+        m.export_gauges()
+        snap = m.snapshot()
+        assert snap["signals"]["step"]["count"] == 3
+        assert reg.gauge("monitor.step_p50").value == pytest.approx(0.2)
+
+
+# --------------------------------------------------------- flight dumps --
+
+class TestFlightRecorder:
+    def test_debounce_and_unique_paths(self, ringless_tracer, tmp_path):
+        clk = _FakeClock()
+        rec = flight.FlightRecorder(str(tmp_path), debounce_s=10.0,
+                                    clock=clk)
+        tracing.instant("x")             # something in the ring
+        p1 = rec.dump("slo_breach-itl")
+        assert p1 and os.path.exists(p1)
+        assert rec.dump("slo_breach-ttft") is None   # same kind, debounced
+        clk.t = 11.0
+        p2 = rec.dump("slo_breach-itl")
+        assert p2 and p2 != p1
+        rec.close()
+
+    def test_validate_flight_rejects_garbage(self):
+        assert flight.validate_flight({}) != []
+        assert flight.validate_flight({"traceEvents": [],
+                                       "flight": {}}) != []
+
+
+# --------------------------------------------------- regression sentinel --
+
+def _bench(step_s, tput):
+    return {"meta": {"kind": "train"},
+            "cells": [{"arch": "a1", "batch": 8,
+                       "step_s": step_s, "tok_per_s": tput}]}
+
+
+class TestRegress:
+    def test_direction_rules(self):
+        assert regress.direction("decode_tok_per_s") == "higher"
+        assert regress.direction("itl_p95_s") == "lower"
+        assert regress.direction("compile_s") == "lower"
+        assert regress.direction("hit_rate") == "higher"
+
+    def test_pass_within_tolerance(self):
+        rep = regress.diff(_bench(1.0, 100.0), _bench(1.2, 90.0), tol=0.5)
+        assert rep["pass"] and rep["regressions"] == []
+        assert rep["cells_matched"] == 1
+
+    def test_fails_on_slowdown_and_tput_drop(self):
+        rep = regress.diff(_bench(1.0, 100.0), _bench(2.0, 100.0), tol=0.5)
+        assert not rep["pass"]
+        assert any("step_s" in r["metric"] for r in rep["regressions"])
+        rep = regress.diff(_bench(1.0, 100.0), _bench(1.0, 10.0), tol=0.5)
+        assert not rep["pass"]
+
+    def test_improvement_never_fails(self):
+        rep = regress.diff(_bench(1.0, 100.0), _bench(0.1, 900.0), tol=0.5)
+        assert rep["pass"] and rep["improvements"]
+
+    def test_unmatched_cells_reported_not_fatal(self):
+        b = _bench(1.0, 100.0)
+        c = {"meta": {}, "cells": [{"arch": "other", "batch": 8,
+                                    "step_s": 1.0}]}
+        rep = regress.diff(b, c, tol=0.5)
+        assert rep["cells_baseline_only"] == ["arch=a1 batch=8"]
+        assert len(rep["cells_candidate_only"]) == 1
+
+    def test_cli_round_trip(self, tmp_path, capsys):
+        bp = tmp_path / "base.json"
+        cp = tmp_path / "cand.json"
+        bp.write_text(json.dumps(_bench(1.0, 100.0)))
+        cp.write_text(json.dumps(_bench(5.0, 100.0)))
+        rc = regress.main(["--baseline", str(bp), "--candidate", str(cp)])
+        assert rc != 0
+        rc = regress.main(["--baseline", str(bp), "--candidate", str(cp),
+                           "--report-only"])
+        assert rc == 0
+        capsys.readouterr()
+
+    def test_committed_benches_self_diff_clean(self):
+        # every committed BENCH_*.json must diff clean against itself —
+        # guards the flatten/identity plumbing against schema drift
+        root = os.path.join(os.path.dirname(__file__), os.pardir)
+        benches = [f for f in os.listdir(root)
+                   if f.startswith("BENCH_") and f.endswith(".json")]
+        assert benches
+        for name in benches:
+            with open(os.path.join(root, name)) as f:
+                doc = json.load(f)
+            rep = regress.diff(doc, doc, tol=0.5)
+            assert rep["pass"], name
+            assert rep["cells_matched"] >= 1, name
+            assert rep["regressions"] == [], name

@@ -62,11 +62,13 @@ class TestStats:
 def clean_tracer():
     t = tracing.get_tracer()
     t.clear()
+    t.detach_ring()
     prev_out = t.out
     try:
         yield t
     finally:
         t.disable()
+        t.detach_ring()
         t.clear()
         t.out = prev_out
 
@@ -173,12 +175,26 @@ class TestMetrics:
             metrics.Histogram("h", buckets=(2.0, 1.0))
 
     def test_histogram_percentile_bounded(self):
+        # q is on [0, 100], matching obs.stats.percentile (PR 10)
         h = metrics.Histogram("h", buckets=(0.01, 0.1, 1.0))
-        assert h.percentile(0.5) is None
+        assert h.percentile(50.0) is None
         h.observe_many([0.05, 0.06, 0.07, 0.5])
-        for q in (0.0, 0.5, 0.9, 1.0):
+        for q in (0.0, 50.0, 90.0, 100.0):
             p = h.percentile(q)
             assert 0.05 <= p <= 0.5
+        with pytest.raises(ValueError):
+            h.percentile(-1.0)
+        with pytest.raises(ValueError):
+            h.percentile(100.5)
+
+    def test_histogram_percentile_fraction_shim(self):
+        # legacy q in (0, 1) is interpreted as a fraction with a
+        # DeprecationWarning — same answer as the new convention
+        h = metrics.Histogram("h", buckets=(0.01, 0.1, 1.0))
+        h.observe_many([0.05, 0.06, 0.07, 0.5])
+        with pytest.warns(DeprecationWarning):
+            old = h.percentile(0.5)
+        assert old == h.percentile(50.0)
 
     def test_jsonl_round_trip_validates(self, tmp_path):
         r = metrics.Registry()
@@ -203,6 +219,33 @@ class TestMetrics:
         assert 'lat_bucket{le="2.0"} 2' in txt
         assert 'lat_bucket{le="+Inf"} 3' in txt
         assert "lat_count 3" in txt
+
+    def test_prometheus_sum_count_typed(self):
+        # _sum/_count are cumulative counters in their own right and
+        # need their own # TYPE lines for strict scrapers (PR 10)
+        r = metrics.Registry()
+        r.histogram("serve.itl_s", buckets=(0.1,)).observe_many([0.05, 0.5])
+        txt = r.prometheus_text()
+        assert "# TYPE serve_itl_s histogram" in txt
+        assert "# TYPE serve_itl_s_sum counter" in txt
+        assert "# TYPE serve_itl_s_count counter" in txt
+        assert "serve_itl_s_count 2" in txt
+
+    def test_prometheus_round_trip_with_labels(self):
+        r = metrics.Registry()
+        r.counter("req.total", labels={"mode": 'pre"fill\\x',
+                                       "arch": "a\nb"}).inc(7)
+        r.gauge("drift.ratio", labels={"mesh": "4x2"}).set(1.25)
+        r.histogram("lat", buckets=(1.0,)).observe_many([0.5, 2.0])
+        parsed = metrics.parse_prometheus_text(r.prometheus_text())
+        samples = {(s, tuple(sorted(lab.items()))): v
+                   for s, lab, v in parsed["samples"]}
+        key = ("req_total", (("arch", "a\nb"), ("mode", 'pre"fill\\x')))
+        assert samples[key] == 7.0
+        assert samples[("drift_ratio", (("mesh", "4x2"),))] == 1.25
+        assert samples[("lat_count", ())] == 2.0
+        assert parsed["types"]["lat"] == "histogram"
+        assert parsed["types"]["lat_sum"] == "counter"
 
     def test_null_registry_discards(self):
         n = metrics.NULL
